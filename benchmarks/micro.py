@@ -1,0 +1,105 @@
+"""Micro-benchmarks: CND sketch throughput, fused consensus mix, kernels
+(interpret mode on CPU — relative numbers; TPU compiles the same bodies),
+and the end-to-end consensus round latency.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_sketch():
+    from repro.core import sketch
+    rows = []
+    for n in (256, 1024, 4096):
+        items = jnp.asarray(
+            np.random.default_rng(0).integers(0, 1 << 20, (n, 8),
+                                              dtype=np.int64).astype(
+                                                  np.int32))
+        fn = jax.jit(lambda it: sketch.build_bitmaps(it, 3, 8192))
+        us = _time(fn, items)
+        rows.append({"name": f"cnd_sketch_jnp_n{n}", "us_per_call": us,
+                     "derived": f"{n / us:.2f} items/us"})
+    return rows
+
+
+def bench_consensus_mix():
+    from repro.kernels import ops, ref
+    rows = []
+    for rows_ in (2048, 8192):
+        w = jnp.ones((rows_, 128))
+        nb = jnp.ones((2, rows_, 128)) * 2.0
+        eta = jnp.asarray([0.5, 0.5])
+        us_k = _time(lambda *a: ops.consensus_mix(*a), w, nb, eta,
+                     jnp.float32(0.5))
+        us_r = _time(jax.jit(ref.consensus_mix), w, nb, eta,
+                     jnp.float32(0.5))
+        mb = rows_ * 128 * 4 * 4 / 1e6
+        rows.append({"name": f"consensus_mix_kernel_r{rows_}",
+                     "us_per_call": us_k,
+                     "derived": f"{mb / us_k * 1e3:.1f} MB/ms interp"})
+        rows.append({"name": f"consensus_mix_xla_r{rows_}",
+                     "us_per_call": us_r,
+                     "derived": f"{mb / us_r * 1e3:.1f} MB/ms"})
+    return rows
+
+
+def bench_rwkv_formulations():
+    """scan vs chunked (the §Perf SSM story, measured on CPU XLA)."""
+    from repro.models import rwkv
+    rows = []
+    b, s, h, d = 1, 512, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, d))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    us_scan = _time(jax.jit(lambda *a: rwkv.scan_reference(*a)[0]),
+                    r, k, v, w, u)
+    us_chunk = _time(jax.jit(lambda *a: rwkv.chunked(*a)[0]),
+                     r, k, v, w, u)
+    rows.append({"name": "rwkv6_scan_s512", "us_per_call": us_scan,
+                 "derived": f"{s / us_scan * 1e3:.1f} tok/ms"})
+    rows.append({"name": "rwkv6_chunked_s512", "us_per_call": us_chunk,
+                 "derived": f"speedup {us_scan / us_chunk:.2f}x vs scan"})
+    return rows
+
+
+def bench_consensus_round():
+    """Full C-DFL round latency for the paper's MLP (4 nodes)."""
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines
+    from repro.data import pipeline, synthetic
+    from repro.models import simple
+    nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 10)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    tr = baselines.cdfl(lambda p, b: loss(p, b),
+                        FedConfig(num_nodes=4, local_steps=10),
+                        TrainConfig(learning_rate=1e-3))
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    jnp.asarray(batcher.node_items()))
+    rb = batcher.next_round()
+    batch = {"x": jnp.asarray(rb["x"]), "y": jnp.asarray(rb["y"])}
+
+    def round_fn(s):
+        return tr.round(s, batch)[0].params
+
+    us = _time(round_fn, state, iters=3)
+    return [{"name": "cdfl_round_mlp_4nodes_10steps", "us_per_call": us,
+             "derived": f"{4 * 10 * 32 / us * 1e6:.0f} samples/s"}]

@@ -1,0 +1,156 @@
+"""Paper reproduction benchmarks — one function per paper table/figure.
+
+Tables 1-4 (paper Sec. 5.4): per-base-station rounds-to-target-accuracy for
+C-DFL vs CFA / C-DFA / CDFA, on redundant MNIST-like data (MLP) and
+BIRD-like data (VGG). Datasets are deterministic synthetic stand-ins with
+the paper's per-node sizes and injected redundancy (DESIGN.md §2) — the
+claims validated are the QUALITATIVE ones: ranking and convergence-speed
+gap under redundancy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.paper_models import MLP_CONFIG, VGG_CONFIG
+from repro.core import baselines
+from repro.data import pipeline, redundancy, synthetic
+from repro.models import simple
+
+ALGS = ["cdfl", "cfa", "cdfa_m", "dpsgd"]
+ALG_LABEL = {"cdfl": "C-DFL(our)", "cfa": "CFA", "cdfa_m": "C-DFA",
+             "dpsgd": "CDFA"}
+# per-node distinct ratios (redundant V2X captures; paper does not publish
+# its duplication rate — we fix a contrastive profile, same for EVERY alg)
+NODE_RATIOS = [0.1, 0.2, 0.4, 0.8]
+MLP_NOISE = 2.5          # template SNR: makes the task non-trivial
+VGG_NOISE = 1.5
+
+
+def _mlp_nodes():
+    return [redundancy.inject_duplicates(
+        synthetic.synthetic_mnist(seed=i, n=MLP_CONFIG.train_per_node,
+                                  noise=MLP_NOISE),
+        NODE_RATIOS[i], seed=i) for i in range(4)]
+
+
+def _vgg_nodes():
+    return [redundancy.inject_duplicates(
+        synthetic.synthetic_bird(seed=i, n=VGG_CONFIG.train_per_node,
+                                 num_classes=VGG_CONFIG.num_classes,
+                                 image_size=VGG_CONFIG.image_size,
+                                 noise=VGG_NOISE),
+        NODE_RATIOS[i], seed=i) for i in range(4)]
+
+
+def _run_to_target(model: str, alg: str, target: float = 0.8,
+                   max_rounds: int = 60, noise_scale: float = 1.0):
+    """Returns (rounds_to_target_per_node, final_acc_per_node, curve)."""
+    if model == "mlp":
+        cfgm = MLP_CONFIG
+        nodes = _mlp_nodes()
+        test = synthetic.synthetic_mnist(seed=99, n=cfgm.test_per_node * 4,
+                                         noise=MLP_NOISE)
+        init_fn = lambda r: simple.mlp_init(r, cfgm)
+        fwd = simple.mlp_forward
+        loss = simple.make_mlp_loss(cfgm)
+        lr = cfgm.learning_rate       # paper: 1e-4
+        local_steps = 10
+    else:
+        cfgm = VGG_CONFIG
+        nodes = _vgg_nodes()
+        test = synthetic.synthetic_bird(seed=99, n=cfgm.test_per_node * 4,
+                                        num_classes=cfgm.num_classes,
+                                        image_size=cfgm.image_size,
+                                        noise=VGG_NOISE)
+        init_fn = lambda r: simple.vgg_init(r, cfgm)
+        fwd = simple.vgg_forward
+        loss = simple.make_vgg_loss(cfgm)
+        lr = cfgm.learning_rate
+        local_steps = 6
+
+    # C-DFL additionally FILTERS local redundancy via the CND bitmap
+    # (paper Sec. 4.2); sketches/weights always come from the RAW data.
+    train_nodes = [redundancy.cnd_dedup(n) for n in nodes] \
+        if alg == "cdfl" else nodes
+
+    xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    def eval_fn(p):
+        return simple.accuracy(fwd(p, xt), yt)
+
+    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg)
+    train = TrainConfig(learning_rate=lr, batch_size=cfgm.batch_size,
+                        beta1=cfgm.beta1, beta2=cfgm.beta2, eps=cfgm.eps)
+    tr = baselines.ALGORITHMS[alg](lambda p, b: loss(p, b), fed, train,
+                                   eval_fn=eval_fn)
+    batcher = pipeline.FederatedBatcher(train_nodes, cfgm.batch_size,
+                                        local_steps, seed=0)
+    raw_items = pipeline.FederatedBatcher(nodes, cfgm.batch_size,
+                                          local_steps).node_items()
+    state = tr.init(jax.random.PRNGKey(0), init_fn,
+                    jnp.asarray(raw_items))
+    reached = np.full(4, -1)
+    curve = []
+    accs = np.zeros(4)
+    for r in range(1, max_rounds + 1):
+        rb = batcher.next_round()
+        state, m = tr.round(state, {"x": jnp.asarray(rb["x"]),
+                                    "y": jnp.asarray(rb["y"])})
+        accs = np.asarray(m["eval"])
+        losses = np.asarray(m["loss"])
+        curve.append((r, float(losses.mean()), float(accs.mean())))
+        newly = (accs >= target) & (reached < 0)
+        reached[newly] = r
+        if (reached > 0).all():
+            break
+    return reached, accs, curve
+
+
+def tables_1_to_4(model: str, max_rounds: int = 60):
+    """Paper Tables 1-4: rounds(acc) per base station per algorithm."""
+    rows = []
+    curves = {}
+    for alg in ALGS:
+        t0 = time.time()
+        reached, accs, curve = _run_to_target(model, alg,
+                                              max_rounds=max_rounds)
+        curves[alg] = curve
+        for node in range(4):
+            rr = int(reached[node]) if reached[node] > 0 else max_rounds
+            rows.append({
+                "table": f"table{node + 1}_{model}",
+                "algorithm": ALG_LABEL[alg],
+                "rounds_to_80": rr,
+                "final_acc": round(float(accs[node]), 3),
+                "wall_s": round(time.time() - t0, 1),
+            })
+    return rows, curves
+
+
+def cnd_accuracy_table():
+    """CND cardinality estimate vs ground truth across redundancy levels
+    (validates the mechanism behind eq. 6-7 weights)."""
+    from repro.core import sketch
+    rows = []
+    for ratio in [0.1, 0.25, 0.5, 0.75, 1.0]:
+        ds = redundancy.inject_duplicates(
+            synthetic.synthetic_mnist(seed=0, n=640), ratio, seed=1)
+        true = redundancy.true_distinct_count(ds.features)
+        bm = sketch.build_bitmaps(jnp.asarray(ds.features))
+        est_paper = float(sketch.cardinality(bm, "paper_mean"))
+        est_lc = float(sketch.cardinality(bm, "linear_counting"))
+        rows.append({
+            "table": "cnd_accuracy", "distinct_ratio": ratio,
+            "true_distinct": int(true),
+            "paper_mean_est": round(est_paper, 1),
+            "linear_counting_est": round(est_lc, 1),
+            "paper_mean_err%": round(100 * abs(est_paper - true) / true, 2),
+            "linear_counting_err%": round(100 * abs(est_lc - true) / true,
+                                          2),
+        })
+    return rows

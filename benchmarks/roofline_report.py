@@ -1,0 +1,36 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str = "dryrun_singlepod.json") -> str:
+    with open(path) as f:
+        data = json.load(f)
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | MODEL/HLO flops | collectives | HLO GF/dev "
+        "| wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    recs = sorted(data["records"],
+                  key=lambda r: (order.get(r["shape"], 9), r["arch"]))
+    for r in recs:
+        colls = sum(r["collective_counts"].values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {colls} | {r['hlo_gflops']:.0f} | {r['wire_gb']:.1f} |")
+    if data.get("failures"):
+        lines.append("")
+        lines.append(f"FAILURES: {data['failures']}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "dryrun_singlepod.json"))

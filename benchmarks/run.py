@@ -1,0 +1,75 @@
+"""Benchmark harness: one function per paper table + micro benches.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and a
+readable paper-tables report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-vgg]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds (CI mode)")
+    ap.add_argument("--skip-vgg", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import micro, paper_tables
+
+    print("name,us_per_call,derived")
+    for fn in (micro.bench_sketch, micro.bench_consensus_mix,
+               micro.bench_rwkv_formulations, micro.bench_consensus_round):
+        for row in fn():
+            print(f"{row['name']},{row['us_per_call']:.1f},"
+                  f"{row['derived']}")
+            sys.stdout.flush()
+
+    # --- CND accuracy (mechanism behind paper eq. 6-7) ---------------------
+    print("\n# CND cardinality estimation (vs ground truth)")
+    for row in paper_tables.cnd_accuracy_table():
+        print(row)
+
+    # --- paper tables 1-4 ---------------------------------------------------
+    max_rounds = 15 if args.quick else 60
+    print("\n# Paper Tables 1-4 (MLP on redundant synthetic-MNIST):"
+          " rounds to 80% acc per base station")
+    rows, curves = paper_tables.tables_1_to_4("mlp", max_rounds=max_rounds)
+    for row in rows:
+        print(row)
+    print("\n# convergence curves (round, loss, acc) per algorithm [MLP]")
+    for alg, curve in curves.items():
+        pts = ";".join(f"{r}:{l:.3f}:{a:.3f}" for r, l, a in curve[::3])
+        print(f"curve_mlp,{alg},{pts}")
+
+    if not args.skip_vgg:
+        vgg_rounds = 10 if args.quick else 40
+        print("\n# Paper Tables 1-4 (VGG on redundant synthetic-BIRD)")
+        rows, curves = paper_tables.tables_1_to_4("vgg",
+                                                  max_rounds=vgg_rounds)
+        for row in rows:
+            print(row)
+        for alg, curve in curves.items():
+            pts = ";".join(f"{r}:{l:.3f}:{a:.3f}" for r, l, a in curve[::3])
+            print(f"curve_vgg,{alg},{pts}")
+
+    # --- roofline table (reads the dry-run sweep output if present) --------
+    import json, os
+    for path in ("dryrun_singlepod.json", "dryrun_multipod.json"):
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+            print(f"\n# roofline terms from {path} "
+                  f"({len(data['records'])} records)")
+            print("arch,shape,t_compute_s,t_memory_s,t_collective_s,"
+                  "bottleneck,useful_ratio")
+            for r in data["records"]:
+                print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.3e},"
+                      f"{r['t_memory_s']:.3e},{r['t_collective_s']:.3e},"
+                      f"{r['bottleneck']},{r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

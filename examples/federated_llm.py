@@ -1,0 +1,97 @@
+"""End-to-end driver: federated training of a ~100M-parameter decoder-only
+LM (qwen3-family reduced config) with C-DFL across 4 nodes for a few
+hundred rounds on synthetic token data with injected redundancy.
+
+The paper's technique as a first-class distributed-training feature: the
+same trainer that reproduces the MLP/VGG tables wraps the assigned
+architectures unchanged.
+
+  PYTHONPATH=src python examples/federated_llm.py --rounds 300     # full
+  PYTHONPATH=src python examples/federated_llm.py --tiny           # smoke
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import save
+from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.registry import get_arch
+from repro.core import baselines
+from repro.data import pipeline, redundancy, synthetic
+from repro.models import transformer
+
+
+def model_100m():
+    """qwen3-family scaled to ~100M params."""
+    return dataclasses.replace(
+        get_arch("qwen3-1.7b"), name="qwen3-100m", num_layers=8,
+        d_model=640, num_heads=10, num_kv_heads=5, head_dim=64,
+        d_ff=1792, vocab_size=8192, dtype="float32")
+
+
+def model_tiny():
+    return dataclasses.replace(
+        model_100m(), name="qwen3-tiny", num_layers=2, d_model=128,
+        num_heads=2, num_kv_heads=1, d_ff=256, vocab_size=512)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--redundancy", type=float, default=0.5)
+    ap.add_argument("--checkpoint", default="ckpt_federated_llm")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    if args.tiny:
+        args.rounds = min(args.rounds, 5)
+        args.seq = 32
+
+    nodes = [redundancy.inject_duplicates(
+        synthetic.token_lm(seed=i, n_seqs=512, seq_len=args.seq,
+                           vocab=cfg.vocab_size),
+        1.0 - args.redundancy, seed=i) for i in range(args.nodes)]
+
+    def loss_fn(params, batch):
+        return transformer.loss_fn(params, cfg, batch,
+                                   group_size=args.batch * args.seq)
+
+    fed = FedConfig(num_nodes=args.nodes, local_steps=args.local_steps)
+    train = TrainConfig(learning_rate=3e-4, batch_size=args.batch)
+    tr = baselines.cdfl(loss_fn, fed, train)
+    batcher = pipeline.FederatedBatcher(nodes, args.batch, args.local_steps)
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: transformer.init_params(r, cfg),
+                    jnp.asarray(batcher.node_items()))
+    n_params = sum(l.size for l in jax.tree.leaves(state.params)) \
+        // args.nodes
+    print(f"model={cfg.name} params/node={n_params/1e6:.1f}M "
+          f"nodes={args.nodes} CND ratios="
+          f"{np.round(np.asarray(state.ratios), 2)}")
+
+    t_start = time.time()
+    for r in range(args.rounds):
+        batch = pipeline.lm_batches(nodes, args.batch, args.local_steps,
+                                    seed=r)
+        state, m = tr.round(state, jax.tree.map(jnp.asarray, batch))
+        if r % max(1, args.rounds // 20) == 0 or r == args.rounds - 1:
+            loss = float(np.asarray(m["loss"]).mean())
+            print(f"round {r:4d} loss={loss:.4f} "
+                  f"disagree={float(m['disagreement']):.2e} "
+                  f"elapsed={time.time() - t_start:.0f}s")
+
+    save(args.checkpoint, state.params, step=args.rounds)
+    print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

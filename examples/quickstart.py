@@ -1,0 +1,44 @@
+"""Quickstart: C-DFL (consensus decentralized federated learning) in ~30
+lines of user code — 4 base stations on a ring, redundant local data,
+CND-weighted consensus + local Adam. Runs in <1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.paper_models import MLP_CONFIG
+from repro.core import baselines
+from repro.data import pipeline, redundancy, synthetic
+from repro.models import simple
+
+# 1. per-station datasets — V2X-style redundancy: only 10-80% distinct
+nodes = [redundancy.inject_duplicates(
+    synthetic.synthetic_mnist(seed=i, n=320, noise=2.0), ratio, seed=i)
+    for i, ratio in enumerate([0.1, 0.3, 0.5, 0.8])]
+
+# 2. C-DFL trainer around any loss function
+loss = simple.make_mlp_loss(MLP_CONFIG)
+trainer = baselines.cdfl(
+    lambda p, b: loss(p, b),
+    FedConfig(num_nodes=4, topology="ring", gamma=0.5, local_steps=10),
+    TrainConfig(learning_rate=1e-3, batch_size=32))
+
+# 3. init: CND sketches of each station's data drive the mixing weights
+batcher = pipeline.FederatedBatcher(nodes, 32, 10, seed=0)
+state = trainer.init(jax.random.PRNGKey(0),
+                     lambda r: simple.mlp_init(r, MLP_CONFIG),
+                     jnp.asarray(batcher.node_items()))
+print("CND distinct-data ratios (Ë_k, eq.7):",
+      np.round(np.asarray(state.ratios), 2))
+
+# 4. federated rounds: consensus exchange + local updates
+for r in range(10):
+    rb = batcher.next_round()
+    state, m = trainer.round(state, {"x": jnp.asarray(rb["x"]),
+                                     "y": jnp.asarray(rb["y"])})
+    print(f"round {r}: loss/station={np.round(np.asarray(m['loss']), 3)} "
+          f"disagreement={float(m['disagreement']):.2e}")
+print("done — stations converged to a consensus model without any server.")

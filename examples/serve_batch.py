@@ -1,0 +1,13 @@
+"""Serving example: batched autoregressive decoding with KV/SSM caches for
+any assigned architecture (reduced size), including the sliding-window
+long-context mode used by the long_500k dry-run shape.
+
+  PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b
+  PYTHONPATH=src python examples/serve_batch.py --arch granite-8b --window 64
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

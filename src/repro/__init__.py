@@ -1,0 +1,2 @@
+"""repro — C-DFL: consensus-based decentralized federated learning on JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,81 @@
+"""Pytree checkpointing: npz arrays + JSON manifest of the tree structure.
+
+Per-node federated states (leading K dim) round-trip unchanged; restore
+validates shapes/dtypes against the manifest. No orbax dependency.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """numpy has no bfloat16 — store as f32, restore() casts back via the
+    target structure's dtype."""
+    arr = jax.device_get(leaf)
+    if str(getattr(arr, "dtype", "")) == "bfloat16":
+        return np.asarray(arr.astype("float32"))
+    return np.asarray(arr)
+
+
+def save(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    np_leaves = [(k, _to_numpy(l)) for k, l in leaves]
+    arrays = {f"a{i}": arr for i, (_, arr) in enumerate(np_leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    treedef = jax.tree.structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": [k for k, _ in np_leaves],
+        "shapes": [list(arr.shape) for _, arr in np_leaves],
+        "dtypes": [str(l.dtype) for _, l in leaves],
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (validates leaf shapes)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree.flatten(like)
+    n = len(manifest["keys"])
+    if len(leaves_like) != n:
+        raise ValueError(
+            f"checkpoint has {n} leaves, target structure has "
+            f"{len(leaves_like)}")
+    new_leaves = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"a{i}"]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"leaf {manifest['keys'][i]}: checkpoint shape "
+                f"{arr.shape} != target {np.shape(ref)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def latest_step(path: str) -> int | None:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    FedConfig, INPUT_SHAPES, MeshConfig, ModelConfig, RunConfig,
+    ShapeConfig, TrainConfig, reduced,
+)

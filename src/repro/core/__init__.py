@@ -1,0 +1,2 @@
+# The paper's primary contribution: CND sketch + consensus DFL.
+from repro.core import baselines, cdfl, consensus, sketch, topology  # noqa: F401

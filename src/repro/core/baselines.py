@@ -1,0 +1,52 @@
+"""Baseline constructors (paper Sec. 5.3) — thin wrappers over the same
+trainer machinery so every algorithm sees identical data/initialization.
+
+  CFA     — consensus FedAvg (Savazzi et al. [20]): datasize mixing weights,
+            redundancy-blind (duplicates inflate a node's weight).
+  C-DFA   — consensus-driven FA (Barbieri et al. [21]): uniform weights on
+            a fraction M of layers (paper compares at M=100%).
+  CDFA    — D-PSGD (Lian et al. [7]): gossip average every SGD step.
+  FedAvg  — centralized reference (not in the paper's tables; sanity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.core.cdfl import Trainer, make_trainer
+
+
+def cdfl(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
+    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="cdfl"),
+                        train, **kw)
+
+
+def cfa(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
+    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="cfa"),
+                        train, **kw)
+
+
+def cdfa_m(loss_fn, fed: FedConfig, train: TrainConfig,
+           fraction: float = 1.0, **kw) -> Trainer:
+    f = dataclasses.replace(fed, algorithm="cdfa_m", cdfa_fraction=fraction)
+    return make_trainer(loss_fn, f, train, **kw)
+
+
+def dpsgd(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
+    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="dpsgd"),
+                        train, **kw)
+
+
+def fedavg(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
+    return make_trainer(loss_fn,
+                        dataclasses.replace(fed, algorithm="fedavg"),
+                        train, **kw)
+
+
+ALGORITHMS = {
+    "cdfl": cdfl,
+    "cfa": cfa,
+    "cdfa_m": cdfa_m,
+    "dpsgd": dpsgd,
+    "fedavg": fedavg,
+}

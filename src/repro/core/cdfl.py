@@ -1,0 +1,144 @@
+"""C-DFL trainer (paper Algorithm 2) — model-agnostic.
+
+One federated **round** =
+  1. exchange (params, CND bitmaps) with graph neighbors,
+  2. consensus-mix with CND-derived weights (eqs. 5-7),
+  3. ``local_steps`` Adam updates on local minibatches (eq. 8, ModelUpdate).
+
+The trainer is generic over the model: it takes ``loss_fn(params, batch)``
+and a per-node initializer. Node-stacked pytrees (leading K dim) make the
+same code run vmapped on one host (simulation / tests / paper repro) or
+under shard_map on a mesh (see repro.launch.train).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, TrainConfig
+from repro.core import consensus, sketch, topology
+from repro.optim import adam
+
+
+class FedState(NamedTuple):
+    params: object            # pytree, leaves (K, ...)
+    opt: object               # AdamState with (K, ...) leaves
+    ratios: jax.Array         # (K,) CND distinct ratios Ë_k
+    sizes: jax.Array          # (K,) raw dataset sizes E_k
+    round: jax.Array          # int32
+
+
+class Trainer(NamedTuple):
+    init: Callable
+    round: Callable           # (state, batches) -> (state, metrics)
+    eta_fn: Callable          # state -> (K, K) mixing weights
+
+
+def _node_sketches(node_items, fed: FedConfig):
+    """CND sketch per node: node_items (K, n, f) int feature tokens."""
+    bitmaps = jax.vmap(
+        lambda it: sketch.build_bitmaps(it, fed.cnd_hashes, fed.cnd_bits)
+    )(node_items)
+    ests = jax.vmap(lambda bm: sketch.cardinality(bm, fed.cnd_estimator))(
+        bitmaps)
+    totals = jnp.full((node_items.shape[0],), node_items.shape[1],
+                      jnp.float32)
+    ratios = jnp.clip(ests / jnp.maximum(totals, 1.0), 1e-6, 1.0)
+    return ratios, totals
+
+
+def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
+                 eval_fn: Optional[Callable] = None) -> Trainer:
+    """loss_fn(params, batch) -> scalar loss. batch leaves have no K dim
+    (the trainer vmaps over nodes)."""
+    adj = jnp.asarray(topology.adjacency(fed.topology, fed.num_nodes))
+    if fed.algorithm == "fedavg":
+        adj = jnp.asarray(topology.adjacency("full", fed.num_nodes))
+    opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
+               train.weight_decay, train.grad_clip)
+
+    def eta_fn(state: FedState) -> jax.Array:
+        if fed.algorithm == "cdfl":
+            return topology.cnd_mixing(adj, state.ratios)        # eq. 6
+        if fed.algorithm in ("cfa", "fedavg"):
+            return topology.datasize_mixing(adj, state.sizes)
+        if fed.algorithm in ("cdfa_m", "dpsgd"):
+            return topology.uniform_mixing(adj)
+        if fed.algorithm == "metropolis":
+            return topology.metropolis_mixing(adj)
+        raise ValueError(f"unknown algorithm {fed.algorithm!r}")
+
+    def init(rng: jax.Array, init_params_fn: Callable,
+             node_items: jax.Array, same_init: bool = True) -> FedState:
+        k = fed.num_nodes
+        if same_init:
+            p0 = init_params_fn(rng)
+            params = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (k,) + l.shape).copy(), p0)
+        else:
+            params = jax.vmap(init_params_fn)(jax.random.split(rng, k))
+        opt_state = jax.vmap(opt.init)(params)
+        ratios, sizes = _node_sketches(node_items, fed)
+        return FedState(params, opt_state, ratios, sizes,
+                        jnp.zeros((), jnp.int32))
+
+    def local_updates(params, opt_state, batches):
+        """vmap over nodes of a scan over local steps.
+        batches: pytree, leaves (K, S, B, ...)."""
+        def one_node(p, o, bs):
+            def step(carry, batch):
+                pp, oo = carry
+                loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
+                pp, oo = opt.update(grads, oo, pp)
+                return (pp, oo), loss
+            (p, o), losses = jax.lax.scan(step, (p, o), bs)
+            return p, o, losses.mean()
+        return jax.vmap(one_node)(params, opt_state, batches)
+
+    def round_fn(state: FedState, batches):
+        eta = eta_fn(state)
+        gamma = jnp.minimum(
+            fed.gamma, 0.99 / jnp.maximum(topology.max_row_sum(eta), 1e-6))
+
+        if fed.algorithm == "dpsgd":
+            # D-PSGD (Lian et al. 17): gossip-average every SGD step.
+            def step(carry, batch):
+                p, o = carry
+                a = topology.consensus_matrix(eta, gamma)
+                p = consensus.apply_matrix(p, a)
+                losses, grads = jax.vmap(
+                    jax.value_and_grad(loss_fn))(p, batch)
+                p, o = jax.vmap(opt.update)(grads, o, p)
+                return (p, o), losses.mean()
+            bt = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), batches)
+            (params, opt_state), losses = jax.lax.scan(
+                step, (state.params, state.opt), bt)
+            loss = losses.mean() * jnp.ones((fed.num_nodes,))
+        else:
+            if fed.algorithm == "fedavg":
+                # centralized reference: server average, weights E_i/sum E
+                w = state.sizes / state.sizes.sum()
+                a = jnp.broadcast_to(w[None, :],
+                                     (fed.num_nodes, fed.num_nodes))
+                phi = consensus.apply_matrix(state.params, a)
+            elif fed.algorithm == "cdfa_m":
+                phi = consensus.partial_consensus_step(
+                    state.params, eta, gamma, fed.cdfa_fraction)
+            else:  # cdfl, cfa, metropolis — eq. (5)
+                phi = consensus.consensus_step(state.params, eta, gamma)
+            params, opt_state, loss = local_updates(phi, state.opt, batches)
+
+        new_state = FedState(params, opt_state, state.ratios, state.sizes,
+                             state.round + 1)
+        metrics = {
+            "loss": loss,                                   # (K,)
+            "disagreement": consensus.disagreement(params),
+            "gamma": gamma,
+        }
+        if eval_fn is not None:
+            metrics["eval"] = jax.vmap(eval_fn)(params)
+        return new_state, metrics
+
+    return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn)

@@ -1,0 +1,126 @@
+"""Consensus aggregation step (paper eq. 5), in two execution modes:
+
+* **simulation** — node-stacked pytrees (leading K dim) on any device count;
+  the consensus operator is a K×K matmul over the node axis. Used by the
+  paper reproduction, tests, and single-host training.
+* **mesh** — inside ``shard_map`` over a named ``fed`` axis, neighbors are
+  physical mesh neighbors and the exchange is ``jax.lax.ppermute`` — the
+  paper's V2X ring mapped onto the TPU ICI/DCN ring.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+
+
+def apply_matrix(params, matrix: jax.Array):
+    """phi = A @ W over the leading node axis of every leaf.
+
+    params: pytree with leaves shaped (K, ...); matrix: (K, K).
+    """
+    def mix(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        out = jnp.einsum("ki,id->kd", matrix.astype(flat.dtype), flat)
+        return out.reshape(leaf.shape)
+    return jax.tree.map(mix, params)
+
+
+def consensus_step(params, eta: jax.Array, gamma: float,
+                   self_weight: float = 1.0):
+    """Paper eq. (5): phi_k = eta_kk*W_k + gamma * sum_i eta_ki (W_i - W_k).
+
+    eta: (K, K) neighbor mixing weights (zero diagonal / off-graph).
+    With self_weight=1 this is the standard consensus update; gamma must be
+    in (0, 1/max_row_sum(eta)) (paper's bound) for stability.
+    """
+    a = topology.consensus_matrix(eta, gamma)
+    if self_weight != 1.0:
+        k = eta.shape[0]
+        a = a + (self_weight - 1.0) * jnp.eye(k, dtype=a.dtype) \
+            * (1.0 - gamma * eta.sum(axis=1))[None, :].T
+    return apply_matrix(params, a)
+
+
+def partial_consensus_step(params, eta, gamma, fraction: float):
+    """C-DFA(M): consensus applied only to the first ``fraction`` of leaves
+    (paper Sec. 5.3 — federated optimization on Q <= N layers)."""
+    leaves, treedef = jax.tree.flatten(params)
+    n_mix = max(1, int(round(fraction * len(leaves))))
+    a = topology.consensus_matrix(eta, gamma)
+    mixed = [
+        apply_matrix(leaf, a) if i < n_mix else leaf
+        for i, leaf in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, mixed)
+
+
+def disagreement(params) -> jax.Array:
+    """Mean squared deviation of node params from the node-mean — the
+    consensus Lyapunov quantity (0 when all nodes agree)."""
+    def dev(leaf):
+        mu = leaf.mean(axis=0, keepdims=True)
+        return jnp.sum((leaf - mu) ** 2)
+    total = sum(jax.tree.leaves(jax.tree.map(dev, params)))
+    count = sum(l.size for l in jax.tree.leaves(params))
+    return total / count
+
+
+# --------------------------------------------------------------------------
+# Mesh mode: ring consensus via ppermute inside shard_map.
+# --------------------------------------------------------------------------
+
+def ring_neighbors(x: jax.Array, axis: str | Sequence[str]):
+    """Return (prev, next) copies of x from the ring neighbors along the
+    named mesh axis/axes (paper's N̄_k = {k-1, k+1} V2X exchange)."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = 1
+    for a in axes:
+        size *= jax.lax.axis_size(a)
+    fwd = [(i, (i + 1) % size) for i in range(size)]
+    bwd = [(i, (i - 1) % size) for i in range(size)]
+    nxt = jax.lax.ppermute(x, axes, fwd)    # from k-1 (shifted forward)
+    prv = jax.lax.ppermute(x, axes, bwd)    # from k+1
+    return nxt, prv
+
+
+def ring_consensus_shard(params, eta_prev: jax.Array, eta_next: jax.Array,
+                         gamma: float, axis: str | Sequence[str]):
+    """Eq. (5) on a physical ring: every fed shard holds ONE node's params
+    (no leading K dim here — we are inside shard_map).
+
+    eta_prev/eta_next: per-node scalars (this node's weights for its two
+    ring neighbors, from the CND sketch exchange).
+    Two ppermutes per round; each transfers the full param pytree — this is
+    the collective the §Roofline 'collective term' measures.
+    """
+    def mix(w):
+        w_prev, w_next = ring_neighbors(w, axis)
+        g = jnp.asarray(gamma, w.dtype)
+        ep = eta_prev.astype(w.dtype)
+        en = eta_next.astype(w.dtype)
+        return w + g * (ep * (w_prev - w) + en * (w_next - w))
+    return jax.tree.map(mix, params)
+
+
+def ring_sketch_exchange(ratio: jax.Array, axis: str | Sequence[str]):
+    """Exchange CND distinct-ratios Ë with ring neighbors and normalize to
+    eq. (6) weights: eta_i = Ë_i / (Ë_prev + Ë_next)."""
+    r_prev, r_next = ring_neighbors(ratio, axis)
+    denom = jnp.maximum(r_prev + r_next, 1e-12)
+    return r_prev / denom, r_next / denom
+
+
+@partial(jax.jit, static_argnames=("gamma", "rounds"))
+def simulate_rounds(params, eta, gamma: float, rounds: int = 1):
+    """Pure consensus iteration (no gradients) — used by convergence tests."""
+    a = topology.consensus_matrix(eta, gamma)
+
+    def body(p, _):
+        return apply_matrix(p, a), disagreement(p)
+
+    return jax.lax.scan(body, params, None, length=rounds)

@@ -1,0 +1,206 @@
+"""CND — Counting Non-repeated Data (paper Algorithm 1), in pure JAX.
+
+Each data item is hashed by ``num_hashes`` independent integer hash
+functions into a bitmap of ``m`` bits; the cardinality (number of distinct
+items) is estimated from the set-bit counts. A SimHash-style signature
+(weighted feature bit votes, Alg. 1 lines 10-30) gives a compact record of
+the local data *distribution* that nodes exchange alongside model params.
+
+This module is the reference ("oracle") implementation; the Pallas TPU
+kernel lives in repro.kernels.cnd_sketch and is validated against it.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Distinct odd constants per hash round (xxhash/murmur-style primes).
+_PRIMES = np.array(
+    [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1],
+    dtype=np.uint32,
+)
+
+
+def _mix32(x: jax.Array, seed: int) -> jax.Array:
+    """xxhash-style 32-bit avalanche. Vectorizes on the TPU VPU: integer
+    multiply + xor-shift only (no scalar hash unit needed)."""
+    x = x.astype(jnp.uint32)
+    p = _PRIMES[seed % len(_PRIMES)]
+    x = x ^ jnp.uint32((seed * 0x9E3779B9 + 0x7F4A7C15) & 0xFFFFFFFF)
+    x = x * p
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x85EBCA77)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE3D)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_items(items: jax.Array, num_hashes: int, m: int) -> jax.Array:
+    """Hash each item (row of int32 feature tokens) into ``num_hashes``
+    bucket indices in [0, m).
+
+    items: (n, f) int32/uint32 — feature tokens (paper: semicolon-separated
+    features of a V2X record; here: pixels/token n-grams bucketized).
+    Returns (num_hashes, n) int32 bucket ids.
+    """
+    items = items.astype(jnp.uint32)
+
+    def one(seed):
+        h = jnp.zeros(items.shape[:-1], jnp.uint32)
+        # order-dependent fold over features (rolling combine, then final mix)
+        for j in range(items.shape[-1]):
+            h = _mix32(h * jnp.uint32(31) + items[..., j], seed + j)
+        return (_mix32(h, 101 + seed) % jnp.uint32(m)).astype(jnp.int32)
+
+    return jnp.stack([one(s) for s in range(num_hashes)])
+
+
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """(..., m) {0,1} -> (..., m//32) uint32. Within a word the bit lanes
+    are disjoint, so OR == sum."""
+    m = bits.shape[-1]
+    w = bits.reshape(*bits.shape[:-1], m // 32, 32).astype(jnp.uint32)
+    return (w << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32)
+
+
+def build_bitmaps(items: jax.Array, num_hashes: int = 3,
+                  m: int = 8192) -> jax.Array:
+    """Paper Alg. 1 lines 1-5: set Bitmap[hash(item)] = 1 per hash fn.
+
+    Returns (num_hashes, m // 32) uint32 packed bitmaps. Scatter of the
+    constant 1 is duplicate-safe (all collisions write the same value).
+    """
+    assert m % 32 == 0
+    idx = hash_items(items, num_hashes, m)                # (H, n)
+    bits = jnp.zeros((num_hashes, m), jnp.uint32)
+    for h in range(num_hashes):
+        bits = bits.at[h, idx[h]].set(1, mode="drop")
+    return _pack_bits(bits)
+
+
+def build_bitmaps_onehot(items: jax.Array, num_hashes: int = 3,
+                         m: int = 8192) -> jax.Array:
+    """Scatter-free bitmap build (the TPU-native formulation used by the
+    Pallas kernel: TPUs have no scatter unit, so each bitmap position is a
+    compare + any-reduction over items). Identical output to build_bitmaps."""
+    assert m % 32 == 0
+    idx = hash_items(items, num_hashes, m)                # (H, n)
+    hit = (idx[..., None] == jnp.arange(m, dtype=jnp.int32))  # (H, n, m)
+    return _pack_bits(hit.any(axis=1))
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-word population count (SWAR bit-twiddling, VPU-friendly)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def set_bits(bitmaps: jax.Array) -> jax.Array:
+    """Number of set bits per bitmap: (H, W) -> (H,)."""
+    return popcount(bitmaps).sum(axis=-1)
+
+
+def cardinality(bitmaps: jax.Array, estimator: str = "paper_mean") -> jax.Array:
+    """Estimate number of distinct items from the bitmaps.
+
+    paper_mean      — Alg. 1 line 9: mean of per-bitmap set-bit counts.
+    linear_counting — beyond-paper: -m ln(z/m) (Whang et al.), corrects the
+                      collision undercount at high load factors.
+    """
+    counts = set_bits(bitmaps).astype(jnp.float32)        # (H,)
+    if estimator == "paper_mean":
+        return counts.mean()
+    if estimator == "linear_counting":
+        m = jnp.float32(bitmaps.shape[-1] * 32)
+        z = jnp.maximum(m - counts, 1.0)                  # zero bits
+        return (-m * jnp.log(z / m)).mean()
+    raise ValueError(f"unknown estimator {estimator!r}")
+
+
+def union_cardinality(bm_a: jax.Array, bm_b: jax.Array,
+                      estimator: str = "paper_mean") -> jax.Array:
+    """|A ∪ B| from OR of bitmaps — lets node k estimate how much of a
+    neighbor's data is new (paper Sec. 4.3: 'calculates the number of
+    different data between it and other neighbor base stations')."""
+    return cardinality(bm_a | bm_b, estimator)
+
+
+def difference_estimate(bm_self: jax.Array, bm_other: jax.Array,
+                        estimator: str = "paper_mean") -> jax.Array:
+    """Estimated count of the neighbor's items NOT present locally:
+    |A ∪ B| − |A| ≈ |B \\ A|."""
+    return (union_cardinality(bm_self, bm_other, estimator)
+            - cardinality(bm_self, estimator))
+
+
+# --------------------------------------------------------------------------
+# SimHash signature (Alg. 1 lines 10-30): weighted feature bit votes.
+# --------------------------------------------------------------------------
+
+def simhash(features: jax.Array, weights: jax.Array | None = None,
+            n_bits: int = 64) -> jax.Array:
+    """Weighted SimHash over a set of feature tokens.
+
+    features: (n, f) int32 feature tokens (n items; f features each).
+    weights:  (n, f) float32 feature weights (Alg. 1 line 12); default 1.
+    Returns (n_bits,) int32 in {0,1}: the aggregate signature bit vector
+    (Alg. 1 lines 24-30) over all items' features.
+    """
+    feats = features.reshape(-1).astype(jnp.uint32)       # flatten tokens
+    if weights is None:
+        w = jnp.ones(feats.shape, jnp.float32)
+    else:
+        w = weights.reshape(-1).astype(jnp.float32)
+    # n-bit hash per feature; bit j of hash -> vote +w / -w (lines 14-22)
+    votes = jnp.zeros((n_bits,), jnp.float32)
+    h = _mix32(feats, 7)
+    h2 = _mix32(feats, 11)
+    bits64 = jnp.concatenate(
+        [((h[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & 1),
+         ((h2[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)],
+        axis=1)[:, :n_bits].astype(jnp.float32)           # (N, n_bits)
+    votes = ((2.0 * bits64 - 1.0) * w[:, None]).sum(axis=0)
+    return (votes > 0).astype(jnp.int32)                  # lines 25-28
+
+
+def signature_distance(sig_a: jax.Array, sig_b: jax.Array) -> jax.Array:
+    """Hamming distance between signatures — distribution dissimilarity."""
+    return jnp.sum(jnp.abs(sig_a - sig_b))
+
+
+# --------------------------------------------------------------------------
+# Node-level sketch container helpers
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_hashes", "m", "sig_bits"))
+def sketch_dataset(items: jax.Array, num_hashes: int = 3, m: int = 8192,
+                   sig_bits: int = 64) -> dict:
+    """Full CND sketch of one node's dataset: bitmaps + signature + size."""
+    bitmaps = build_bitmaps(items, num_hashes, m)
+    sig = simhash(items, n_bits=sig_bits)
+    return {
+        "bitmaps": bitmaps,
+        "signature": sig,
+        "total": jnp.int32(items.shape[0]),
+    }
+
+
+def distinct_ratio(sketch: dict, estimator: str = "paper_mean") -> jax.Array:
+    """Ë_k = E_k' / E_k (paper eq. 7): estimated distinct / total."""
+    est = cardinality(sketch["bitmaps"], estimator)
+    total = jnp.maximum(sketch["total"].astype(jnp.float32), 1.0)
+    return jnp.clip(est / total, 0.0, 1.0)
+
+
+def expected_load_factor(n_distinct: int, m: int) -> float:
+    """E[set bits]/m for n distinct balls in m bins (analysis helper)."""
+    return 1.0 - math.exp(-n_distinct / m)

@@ -1,0 +1,84 @@
+"""Communication graphs and mixing-weight construction (paper eqs. 6-7).
+
+A topology is an adjacency over K nodes (base stations). The paper uses a
+ring of K=4; we also support full and chain graphs. Mixing weights eta[k,i]
+are row-normalized over k's neighborhood N̄_k (excluding self), per eq. 6,
+with Ë_i = E_i' / E_i the CND distinct-data ratio (eq. 7).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def adjacency(kind: str, k: int) -> np.ndarray:
+    """(K, K) 0/1 adjacency, no self loops."""
+    a = np.zeros((k, k), dtype=np.float32)
+    if kind == "ring":
+        for i in range(k):
+            a[i, (i - 1) % k] = 1.0
+            a[i, (i + 1) % k] = 1.0
+        if k == 2:
+            a = np.minimum(a, 1.0)
+    elif kind == "full":
+        a = np.ones((k, k), np.float32) - np.eye(k, dtype=np.float32)
+    elif kind == "chain":
+        for i in range(k - 1):
+            a[i, i + 1] = a[i + 1, i] = 1.0
+    else:
+        raise ValueError(f"unknown topology {kind!r}")
+    return a
+
+
+def cnd_mixing(adj: jnp.ndarray, ratios: jnp.ndarray) -> jnp.ndarray:
+    """eta[k,i] = Ë_i / sum_{j in N̄_k} Ë_j  (paper eq. 6), zero off-graph.
+
+    ratios: (K,) Ë_k = E_k'/E_k from the exchanged CND sketches.
+    Rows sum to 1 over the neighborhood.
+    """
+    w = adj * ratios[None, :]                      # weight neighbors by Ë_i
+    denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+    return w / denom
+
+
+def uniform_mixing(adj: jnp.ndarray) -> jnp.ndarray:
+    """eta[k,i] = 1/|N̄_k| — CFA-style, redundancy-blind."""
+    denom = jnp.maximum(adj.sum(axis=1, keepdims=True), 1e-12)
+    return adj / denom
+
+
+def datasize_mixing(adj: jnp.ndarray, sizes: jnp.ndarray) -> jnp.ndarray:
+    """eta[k,i] ∝ E_i (raw dataset sizes, no dedup) — FedAvg-style weights."""
+    w = adj * sizes[None, :].astype(jnp.float32)
+    denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+    return w / denom
+
+
+def metropolis_mixing(adj: jnp.ndarray) -> jnp.ndarray:
+    """Metropolis-Hastings weights (beyond-paper): doubly stochastic, hence
+    provably consensus-convergent on any connected graph.
+    W[k,i] = 1/(1+max(d_k,d_i)) for edges; W[k,k] = 1 - sum."""
+    deg = adj.sum(axis=1)
+    w = adj / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
+    w = w * adj
+    return w  # neighbor part only; self weight handled by consensus step
+
+
+def max_row_sum(eta: jnp.ndarray) -> jnp.ndarray:
+    """∇ = max_k sum_i eta[k,i] — paper's bound: gamma in (0, 1/∇)."""
+    return eta.sum(axis=1).max()
+
+
+def consensus_matrix(eta: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Full K×K linear consensus operator A with A@W implementing eq. (5):
+    phi_k = W_k + gamma * sum_i eta[k,i] (W_i - W_k)."""
+    k = eta.shape[0]
+    row = eta.sum(axis=1)
+    return jnp.eye(k, dtype=eta.dtype) * (1.0 - gamma * row)[None, :].T \
+        + gamma * eta
+
+
+def spectral_gap(a: jnp.ndarray) -> float:
+    """1 - |lambda_2| of the consensus matrix: consensus convergence rate."""
+    ev = jnp.sort(jnp.abs(jnp.linalg.eigvals(a)))
+    return float(1.0 - ev[-2]) if a.shape[0] > 1 else 1.0

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: CND sketch build (paper Algorithm 1).
+
+The paper's hot loop — hash every item, set Bitmap[hash] = 1 — is a
+pointer-chasing scatter on CPU/GPU. TPUs have no scatter unit, so the
+TPU-native rewrite is:
+
+  * hashing: xxhash-style integer avalanche, vectorized across the 8x128
+    VPU lanes (a block of items is hashed simultaneously);
+  * bitmap update: for each 32-bit bitmap word, an OR-reduction of the
+    items' one-hot contributions (compare + shift + reduce), tiled so the
+    (block_items x words) compare matrix stays in VMEM.
+
+The bitmap scratch (num_hashes x m/32 words) persists in VMEM across the
+sequential item-block grid dimension and is written out once at the end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sketch import _mix32
+
+
+def _or_reduce_items(vals: jax.Array) -> jax.Array:
+    """(n_items, W) uint32 -> (W,) uint32 bitwise-OR over items."""
+    return jax.lax.reduce(vals, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+
+
+def _kernel(items_ref, out_ref, bm_scr, *, num_hashes: int, m: int):
+    step = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(step == 0)
+    def _init():
+        bm_scr[...] = jnp.zeros_like(bm_scr)
+
+    items = items_ref[...].astype(jnp.uint32)            # (blk, f)
+    blk, f = items.shape
+    words = m // 32
+    for s in range(num_hashes):
+        # rolling fold over the item's feature tokens (Alg. 1 hash(item))
+        h = jnp.zeros((blk,), jnp.uint32)
+        for j in range(f):
+            h = _mix32(h * jnp.uint32(31) + items[:, j], s + j)
+        idx = _mix32(h, 101 + s) % jnp.uint32(m)          # (blk,)
+        word = (idx >> 5).astype(jnp.int32)
+        bit = (idx & jnp.uint32(31))
+        wid = jax.lax.broadcasted_iota(jnp.int32, (blk, words), 1)
+        vals = jnp.where(word[:, None] == wid,
+                         (jnp.uint32(1) << bit)[:, None],
+                         jnp.uint32(0))                   # (blk, W)
+        bm_scr[s, :] = bm_scr[s, :] | _or_reduce_items(vals)
+
+    @pl.when(step == nsteps - 1)
+    def _finish():
+        out_ref[...] = bm_scr[...]
+
+
+def cnd_bitmaps(items: jax.Array, num_hashes: int = 3, m: int = 8192,
+                *, block_items: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """items: (n, f) int32 feature tokens -> (num_hashes, m//32) uint32.
+
+    n is padded to a multiple of block_items by repeating row 0 (idempotent
+    for a bitmap: duplicates OR the same bit)."""
+    n, f = items.shape
+    blk = min(block_items, max(8, n))
+    pad = (-n) % blk
+    if pad:
+        items = jnp.concatenate(
+            [items, jnp.broadcast_to(items[:1], (pad, f))], axis=0)
+    grid = (items.shape[0] // blk,)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_hashes=num_hashes, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((num_hashes, m // 32), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_hashes, m // 32), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((num_hashes, m // 32), jnp.uint32)],
+        interpret=interpret,
+    )(items)
+
+
+# --- popcount kernel (cardinality readout) ---------------------------------
+
+def _popcount_kernel(bm_ref, out_ref):
+    x = bm_ref[...]
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    counts = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    out_ref[...] = counts.sum(axis=-1, keepdims=True)
+
+
+def cnd_popcount(bitmaps: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(H, W) uint32 -> (H,) int32 set-bit counts."""
+    h, w = bitmaps.shape
+    out = pl.pallas_call(
+        _popcount_kernel,
+        in_specs=[pl.BlockSpec((h, w), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((h, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, 1), jnp.int32),
+        interpret=interpret,
+    )(bitmaps)
+    return out[:, 0]

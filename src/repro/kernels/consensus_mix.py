@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused consensus mixing (paper eq. 5).
+
+    out = W_k + gamma * sum_i eta_i * (W_i - W_k)
+
+Naively each neighbor term is a separate HBM pass over the full parameter
+vector (2 reads + 1 write per neighbor); the fused kernel streams W_k and
+all N neighbor shards through VMEM once: (N+1) reads + 1 write total.
+Tiles are (block_rows, 128) — f32/bf16 lane-aligned for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(scal_ref, w_ref, nb_ref, out_ref, *, n_neighbors: int):
+    # scal_ref: (1, n_neighbors + 1) f32 — [gamma, eta_0..eta_{N-1}]
+    w = w_ref[...].astype(jnp.float32)
+    gamma = scal_ref[0, 0]
+    acc = jnp.zeros_like(w)
+    for i in range(n_neighbors):                    # static unroll (N <= ~8)
+        eta = scal_ref[0, i + 1]
+        acc += eta * (nb_ref[i].astype(jnp.float32) - w)
+    out_ref[...] = (w + gamma * acc).astype(out_ref.dtype)
+
+
+def consensus_mix(w: jax.Array, neighbors: jax.Array, eta: jax.Array,
+                  gamma: jax.Array, *, block_rows: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """w: (rows, 128); neighbors: (N, rows, 128); eta: (N,); gamma scalar."""
+    n, rows, lane = neighbors.shape
+    assert lane == LANE and w.shape == (rows, LANE)
+    assert rows % block_rows == 0, (rows, block_rows)
+    scal = jnp.concatenate(
+        [jnp.asarray(gamma, jnp.float32)[None], eta.astype(jnp.float32)]
+    )[None, :]                                       # (1, N+1)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_neighbors=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n + 1), lambda r: (0, 0)),          # scalars
+            pl.BlockSpec((block_rows, LANE), lambda r: (r, 0)),  # W_k
+            pl.BlockSpec((n, block_rows, LANE), lambda r: (0, r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), w.dtype),
+        interpret=interpret,
+    )(scal, w, neighbors)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blockwise flash attention with GQA, causal masking
+and sliding-window support.
+
+Standard online-softmax formulation: grid (batch, q_heads, Sq/bq, Sk/bk);
+the last grid dim iterates sequentially on TPU, so the running max/denom/
+accumulator live in VMEM scratch across k-blocks and the output is written
+on the final k-block. Block shapes (bq, d) x (bk, d) hit the MXU; masking
+is computed from block offsets (no (Sq, Sk) score tensor ever reaches HBM
+— that is the difference vs. the XLA reference path, which the §Roofline
+memory term shows is HBM-bound on the materialized scores).
+
+GQA: kv head index = q head // (H // KV) via the k/v BlockSpec index maps
+— no repeat/materialization of k/v per q head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, causal: bool, window, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = q @ k.T                                          # (bq, bk) MXU
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                               # (bq, bk)
+    # fully-masked rows (early causal blocks): p rows are exp(NEG_INF-m)=0
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_scr[...] = m_cur
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    groups = h // kv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+
+    qt = q.transpose(0, 2, 1, 3)                         # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                         # (B, KV, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, sq // bq, sk // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                          window=window, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // groups, k_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // groups, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),            # running max
+            pltpu.VMEM((bq, 1), jnp.float32),            # running denom
+            pltpu.VMEM((bq, d), jnp.float32),            # output accum
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,72 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` is resolved automatically: TPU backends run the compiled
+kernels; CPU (this container, and any unit test) runs interpret mode,
+which executes the same kernel body in Python/XLA for correctness.
+Higher layers call these, never pallas_call directly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import consensus_mix as _cm
+from repro.kernels import cnd_sketch as _cs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _rs
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("num_hashes", "m", "block_items"))
+def cnd_bitmaps(items, num_hashes: int = 3, m: int = 8192,
+                block_items: int = 256):
+    return _cs.cnd_bitmaps(items, num_hashes, m, block_items=block_items,
+                           interpret=_interpret())
+
+
+@jax.jit
+def cnd_popcount(bitmaps):
+    return _cs.cnd_popcount(bitmaps, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def consensus_mix(w, neighbors, eta, gamma, block_rows: int = 256):
+    return _cm.consensus_mix(w, neighbors, eta, gamma,
+                             block_rows=block_rows, interpret=_interpret())
+
+
+def consensus_mix_pytree(params, neighbor_params, eta, gamma):
+    """Apply the fused mix to every leaf of a param pytree.
+
+    params: leaves (...); neighbor_params: leaves (N, ...). Leaves are
+    flattened and padded to (rows, 128) tiles for the kernel."""
+    def mix_leaf(w, nb):
+        shape = w.shape
+        n = nb.shape[0]
+        flat = w.reshape(-1)
+        pad = (-flat.size) % (256 * 128)
+        flat = jnp.pad(flat, (0, pad))
+        nbf = jnp.pad(nb.reshape(n, -1), ((0, 0), (0, pad)))
+        out = consensus_mix(flat.reshape(-1, 128),
+                            nbf.reshape(n, -1, 128), eta, gamma)
+        return out.reshape(-1)[:w.size].reshape(shape)
+    return jax.tree.map(mix_leaf, params, neighbor_params)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w, u, chunk: int = 32):
+    return _rs.rwkv6_scan(r, k, v, w, u, chunk=chunk,
+                          interpret=_interpret())

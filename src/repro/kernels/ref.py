@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as _sketch
+from repro.models import attention as _attention
+from repro.models import rwkv as _rwkv
+
+
+def consensus_mix(w, neighbors, eta, gamma):
+    """out = w + gamma * sum_i eta_i (neighbors_i - w)."""
+    w32 = w.astype(jnp.float32)
+    delta = (neighbors.astype(jnp.float32) - w32[None])
+    acc = jnp.einsum("n,nrl->rl", eta.astype(jnp.float32), delta)
+    return (w32 + jnp.asarray(gamma, jnp.float32) * acc).astype(w.dtype)
+
+
+def cnd_bitmaps(items, num_hashes: int = 3, m: int = 8192):
+    """Packed CND bitmaps — identical to the core sketch module."""
+    return _sketch.build_bitmaps(items, num_hashes, m)
+
+
+def cnd_popcount(bitmaps):
+    return _sketch.set_bits(bitmaps)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D)."""
+    return _attention.attend(q, k, v, causal=causal, window=window)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None):
+    """(B, S, H, D) inputs; returns (y, s_final)."""
+    return _rwkv.scan_reference(r, k, v, w, u, s0)

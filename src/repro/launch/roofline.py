@@ -1,0 +1,145 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = wire_bytes / link_bw             (per chip)
+
+cost_analysis() is post-SPMD, i.e. per-device; collective bytes are not in
+cost_analysis, so we parse the compiled HLO text and sum the result-shape
+bytes of every collective op, weighted by a wire factor (ring all-reduce
+moves ~2x the buffer; the others ~1x). Hardware: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (effective, one link assumed)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0}          # ring AR ~2x; others ~1x
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result shape(s) precede ` <opname>(`; ops may be fused names like
+# `all-gather-start`; match the base op.
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(_WIRE_FACTOR.get(op, 1.0) * b
+                   for op, b in self.bytes_by_op.items())
+
+    @property
+    def total(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    wire_bytes: float            # per device
+    collectives: CollectiveStats
+    model_flops: float           # analytic useful flops per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops": self.flops / 1e9,
+            "hbm_gb": self.hbm_bytes / 1e9,
+            "wire_gb": self.wire_bytes / 1e9,
+            "useful_flops_ratio": self.useful_ratio,
+            "n_collectives": self.collectives.total,
+        }
+
+
+def model_flops_per_device(cfg, shape, num_devices: int,
+                           fed_nodes: int = 0) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D inference, with
+    N = active params (MoE: top-k only). D = tokens processed globally.
+    Federated: every node trains its own replica -> multiply by F."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / num_devices
+
+
+def format_row(name: str, r: Roofline) -> str:
+    d = r.row()
+    return (f"{name:42s} {d['t_compute_s']:>10.3e} {d['t_memory_s']:>10.3e} "
+            f"{d['t_collective_s']:>10.3e} {d['bottleneck']:>10s} "
+            f"{d['useful_flops_ratio']:>6.2f} {d['n_collectives']:>4d}")

@@ -1,0 +1,174 @@
+"""Mesh-level step functions: federated train step (C-DFL round on the fed
+mesh) and serving steps (prefill / decode on the production mesh).
+
+Consensus on the mesh: node params carry a leading F dim sharded over the
+fed axes; the ring neighbor exchange is ``jnp.roll`` along that sharded
+dim, which GSPMD lowers to ``collective-permute`` — the paper's V2X ring
+becomes a physical ICI/DCN ring (verified in the dry-run HLO). The CND
+ratios (F,) ride the same mechanism.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.models import pspec, transformer
+from repro.optim import adam
+
+
+class MeshFedState(NamedTuple):
+    params: object          # leaves (F, ...)
+    opt: object             # AdamState, leaves (F, ...)
+    ratios: jax.Array       # (F,) CND distinct ratios
+
+
+def ring_consensus_roll(params, ratios: jax.Array, gamma: float):
+    """Paper eq. (5) on the ring, vectorized over the node dim:
+    phi_k = W_k + gamma*(eta_prev*(W_{k-1}-W_k) + eta_next*(W_{k+1}-W_k)),
+    eta from CND ratios per eq. (6). roll on the fed-sharded leading dim
+    lowers to collective-permute."""
+    r_prev = jnp.roll(ratios, 1)
+    r_next = jnp.roll(ratios, -1)
+    denom = jnp.maximum(r_prev + r_next, 1e-12)
+    eta_prev = (r_prev / denom).astype(jnp.float32)
+    eta_next = (r_next / denom).astype(jnp.float32)
+
+    def mix(leaf):
+        w_prev = jnp.roll(leaf, 1, axis=0)
+        w_next = jnp.roll(leaf, -1, axis=0)
+        bshape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
+        ep = eta_prev.reshape(bshape).astype(leaf.dtype)
+        en = eta_next.reshape(bshape).astype(leaf.dtype)
+        g = jnp.asarray(gamma, leaf.dtype)
+        return leaf + g * (ep * (w_prev - leaf) + en * (w_next - leaf))
+
+    return jax.tree.map(mix, params)
+
+
+def make_fed_train_step(cfg: ModelConfig, fed: FedConfig,
+                        train: TrainConfig, unroll: bool = False):
+    """One C-DFL round (consensus + one local Adam step per node) as a
+    single jit-able function over node-stacked state."""
+    opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
+               train.weight_decay, train.grad_clip)
+    remat = train.remat == "full"
+
+    def node_loss(params, batch):
+        return transformer.loss_fn(params, cfg, batch, remat=remat,
+                                   unroll=unroll)
+
+    def train_step(state: MeshFedState, batch) -> tuple:
+        # Alg. 2: receive neighbors' (w, bitmaps) -> consensus -> ModelUpdate
+        with pspec.logical_rules(pspec.TRAIN_RULES):
+            phi = ring_consensus_roll(state.params, state.ratios, fed.gamma)
+            losses, grads = jax.vmap(
+                jax.value_and_grad(node_loss))(phi, batch)
+            params, opt_state = jax.vmap(opt.update)(grads, state.opt, phi)
+            new_state = MeshFedState(params, opt_state, state.ratios)
+            return new_state, losses.mean()
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, window_override=None,
+                      multi_pod: bool = False, unroll: bool = False):
+    rules = pspec.SERVE_RULES_MULTIPOD if multi_pod else pspec.SERVE_RULES
+
+    def prefill_step(params, batch):
+        with pspec.logical_rules(rules):
+            logits, _ = transformer.forward(
+                params, cfg, batch, window_override=window_override,
+                last_only=True, unroll=unroll)
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, window_override=None,
+                    multi_pod: bool = False, unroll: bool = False):
+    """Single-token decode against a KV/SSM cache of seq_len tokens."""
+    rules = pspec.SERVE_RULES_MULTIPOD if multi_pod else pspec.SERVE_RULES
+
+    def serve_step(params, decode_state, tokens):
+        with pspec.logical_rules(rules):
+            logits, new_state = transformer.decode_step(
+                params, cfg, decode_state, tokens,
+                window_override=window_override, unroll=unroll)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    new_state)
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStructs — never allocated) for the dry-run.
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fed_state_struct(cfg: ModelConfig, fed_nodes: int,
+                     train: TrainConfig):
+    """Abstract MeshFedState for arch cfg with F nodes."""
+    params0 = jax.eval_shape(
+        functools.partial(transformer.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+
+    def stack(leaf):
+        return _sds((fed_nodes,) + tuple(leaf.shape), leaf.dtype)
+
+    params = jax.tree.map(stack, params0)
+    opt0 = jax.eval_shape(
+        adam(train.learning_rate).init,
+        jax.tree.map(lambda l: _sds(l.shape, l.dtype), params0))
+    opt = jax.tree.map(stack, opt0)
+    ratios = _sds((fed_nodes,), jnp.float32)
+    return MeshFedState(params=params, opt=opt, ratios=ratios)
+
+
+def serve_params_struct(cfg: ModelConfig):
+    params = jax.eval_shape(
+        functools.partial(transformer.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+    return params
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, fed_nodes: int = 0,
+                window_override=None):
+    """Abstract model inputs for (arch x input-shape).
+
+    train:   {"tokens": (F, B/F, S), "labels": ...} [+ "embeds" for VLM]
+    prefill: {"tokens": (B, S)} [+ "embeds"]
+    decode:  tokens (B,) — the DecodeState comes from decode_state_struct.
+    """
+    if shape.mode == "train":
+        assert fed_nodes > 0 and shape.global_batch % fed_nodes == 0
+        b = shape.global_batch // fed_nodes
+        lead = (fed_nodes, b)
+    else:
+        lead = (shape.global_batch,)
+
+    if shape.mode == "decode":
+        return {"tokens": _sds(lead, jnp.int32)}
+
+    batch = {}
+    s = shape.seq_len
+    if cfg.modality == "vision":
+        p = cfg.num_patches
+        batch["embeds"] = _sds(lead + (p, cfg.d_model), jnp.dtype(cfg.dtype))
+        s = s - p
+    batch["tokens"] = _sds(lead + (s,), jnp.int32)
+    if shape.mode == "train":
+        batch["labels"] = _sds(lead + (s,), jnp.int32)
+    return batch
+
+
+def decode_state_struct(cfg: ModelConfig, shape: ShapeConfig,
+                        window_override=None):
+    return jax.eval_shape(
+        functools.partial(transformer.init_decode, cfg=cfg,
+                          batch=shape.global_batch, max_len=shape.seq_len,
+                          window_override=window_override))

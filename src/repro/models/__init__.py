@@ -1,0 +1,3 @@
+from repro.models import (  # noqa: F401
+    attention, layers, mamba, moe, rwkv, simple, stubs, transformer,
+)

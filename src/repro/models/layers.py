@@ -1,0 +1,128 @@
+"""Shared NN layers: norms, rotary embeddings, gated MLPs, embeddings.
+
+Params are plain nested dicts of jnp arrays; init functions take an rng and
+return the dict. All matmuls keep a ``dtype`` for activations while params
+may be stored in bf16 (configs) or f32 (tests / paper repro).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import pspec
+
+
+def _dense_init(rng, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# --- norms ----------------------------------------------------------------
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# --- rotary ----------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs -------------------------------------------------------------------
+
+def swiglu_init(rng, d_model, d_ff, dtype=jnp.float32):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": _dense_init(r1, (d_model, d_ff), dtype=dtype),
+        "w_up": _dense_init(r2, (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(r3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu(params, x):
+    gate = jax.nn.silu(x @ params["w_gate"])
+    gate = pspec.constrain(gate, *( (None,) * (gate.ndim - 1) ), "ffn")
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+def gelu_mlp_init(rng, d_model, d_ff, dtype=jnp.float32):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "w_up": _dense_init(r1, (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(r2, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w_up"])
+    h = pspec.constrain(h, *((None,) * (h.ndim - 1)), "ffn")
+    return h @ params["w_down"]
+
+
+def make_mlp(kind: str):
+    if kind == "swiglu":
+        return swiglu_init, swiglu
+    if kind == "gelu":
+        return gelu_mlp_init, gelu_mlp
+    raise ValueError(kind)
+
+
+# --- embeddings --------------------------------------------------------------
+
+def embedding_init(rng, vocab, d_model, dtype=jnp.float32):
+    return {"table": _dense_init(rng, (vocab, d_model), scale=0.02,
+                                 dtype=dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits in f32 (loss stability)."""
+    return x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T

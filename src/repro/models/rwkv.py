@@ -1,0 +1,204 @@
+"""RWKV6 "Finch" time-mix block — attention-free, data-dependent decay
+[arXiv:2404.05892].
+
+Per head h with head size D, the recurrence over time t is
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T                (state: D x D)
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with the decay w_t a *data-dependent* function of x_t (the Finch novelty,
+vs RWKV5's static decay), here via the paper's low-rank (LoRA) map.
+
+Reference path: jax.lax.scan over time (O(1) decode state — this is why
+rwkv6-7b runs long_500k natively). The chunked Pallas kernel
+(repro.kernels.rwkv6_scan) parallelizes within chunks and is validated
+against ``scan_reference``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+HEAD_SIZE = 64
+LORA_RANK = 64
+CHUNK = 16
+MAX_LOG_DECAY = 4.0   # w >= exp(-4) ~ 0.018/step
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array           # (B, H, D, D) wkv state
+    x_prev: jax.Array      # (B, d_model) last input (token shift)
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // (cfg.ssm_heads or HEAD_SIZE) \
+        if cfg.ssm_heads else cfg.d_model // HEAD_SIZE
+
+
+def head_size(cfg: ModelConfig) -> int:
+    return cfg.ssm_heads or HEAD_SIZE
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    hs = head_size(cfg)
+    h = d // hs
+    r = jax.random.split(rng, 8)
+    p = {
+        "wr": layers._dense_init(r[0], (d, d), dtype=dtype),
+        "wk": layers._dense_init(r[1], (d, d), dtype=dtype),
+        "wv": layers._dense_init(r[2], (d, d), dtype=dtype),
+        "wg": layers._dense_init(r[3], (d, d), dtype=dtype),
+        "wo": layers._dense_init(r[4], (d, d), dtype=dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.zeros((d,), dtype) - 4.0,
+        "decay_a": layers._dense_init(r[5], (d, LORA_RANK), dtype=dtype),
+        "decay_b": layers._dense_init(r[6], (LORA_RANK, d), scale=0.01,
+                                      dtype=dtype),
+        "bonus_u": (jax.random.normal(r[7], (h, hs)) * 0.1).astype(dtype),
+        # token-shift interpolation weights
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+    }
+    return p
+
+
+def _shift(x, x_prev):
+    """token shift: x_{t-1} sequence (prepend x_prev, drop last)."""
+    return jnp.concatenate(
+        [x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _mix(params, x, xs):
+    def lerp(mu):
+        return x * params[mu] + xs * (1.0 - params[mu])
+    r = lerp("mu_r") @ params["wr"]
+    k = lerp("mu_k") @ params["wk"]
+    v = lerp("mu_v") @ params["wv"]
+    lw = params["decay_w0"] + jnp.tanh(
+        lerp("mu_w") @ params["decay_a"]) @ params["decay_b"]
+    # clamp per-step log-decay to [-MAX_LOG_DECAY, 0): keeps the chunked
+    # factorization (exp(+-L) with |L| <= C*MAX_LOG_DECAY) inside f32 range
+    w = jnp.exp(-jnp.clip(jnp.exp(lw.astype(jnp.float32)),
+                          1e-6, MAX_LOG_DECAY))            # decay in (0,1)
+    g = jax.nn.silu(x @ params["wg"])
+    return r, k, v, w, g
+
+
+def _heads(x, h, hs):
+    return x.reshape(*x.shape[:-1], h, hs)
+
+
+def scan_reference(r, k, v, w, u, s0=None):
+    """Sequential wkv recurrence. r/k/v/w: (B, S, H, D); u: (H, D).
+    Returns (y (B,S,H,D), s_final (B,H,D,D))."""
+    b, seq, h, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp          # (B, H, D) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,D,D)
+        yt = jnp.einsum("bhd,bhde->bhe", rt,
+                        s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def chunked(r, k, v, w, u, s0=None, chunk: int = CHUNK):
+    """Chunkwise-parallel wkv — identical math to scan_reference,
+    restructured for the MXU: intra-chunk pairwise matmuls + a log-depth
+    associative scan over per-chunk state summaries. No sequential while
+    loop, so the dry-run cost analysis sees every flop (DESIGN.md §6/§8).
+
+    Stability: per-step log-decay is clamped to [-MAX_LOG_DECAY, 0) in
+    _mix, so exp(+-L) with |L| <= chunk*MAX_LOG_DECAY stays in f32 range.
+    """
+    b, seq, h, d = r.shape
+    assert seq % chunk == 0, (seq, chunk)
+    nc = seq // chunk
+
+    def rs(x):
+        return x.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(w)
+    logw = jnp.log(wc)
+    el = jnp.cumsum(logw, axis=2)                      # L_t   (b,nc,C,h,d)
+    el_prev = el - logw                                # L_{t-1}
+    r_t = rc * jnp.exp(el_prev)                        # <= |r|
+    k_t = kc * jnp.exp(-el)                            # <= |k| e^{C*maxdecay}
+
+    scores = jnp.einsum("bnthd,bnihd->bnhti", r_t, k_t)
+    t_i = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    scores = scores * t_i                              # strict causal
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, u.astype(jnp.float32), kc)
+    y = jnp.einsum("bnhti,bnihd->bnthd", scores, vc) + diag[..., None] * vc
+
+    # per-chunk summaries: S' = diag(D_c) S + U_c   (decay on the k-dim)
+    k_dec = kc * jnp.exp(el[:, :, -1:] - el)           # <= |k|
+    u_c = jnp.einsum("bnihd,bnihe->bnhde", k_dec, vc)  # (b,nc,h,d,d)
+    d_c = jnp.exp(el[:, :, -1])                        # (b,nc,h,d)
+
+    # exclusive chunk-start states via associative scan (shift by identity)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    d_sh = jnp.concatenate(
+        [jnp.ones((b, 1, h, d), jnp.float32), d_c[:, :-1]], axis=1)
+    u_sh = jnp.concatenate([s0[:, None], u_c[:, :-1]], axis=1)
+
+    def combine(a, b_):
+        d1, u1 = a
+        d2, u2 = b_
+        return d2 * d1, d2[..., None] * u1 + u2
+
+    d_all, s_start = jax.lax.associative_scan(combine, (d_sh, u_sh), axis=1)
+    y = y + jnp.einsum("bnthd,bnhde->bnthe", r_t, s_start)
+    s_fin = d_c[:, -1][..., None] * s_start[:, -1] + u_c[:, -1]
+    return y.reshape(b, seq, h, d), s_fin
+
+
+def forward(params, cfg: ModelConfig, x, state: RwkvState | None = None,
+            use_chunked: bool | None = None):
+    """x: (B, S, d_model) -> (out, new_state)."""
+    b, seq, d = x.shape
+    h, hs = num_heads(cfg), head_size(cfg)
+    x_prev = state.x_prev if state is not None \
+        else jnp.zeros((b, d), x.dtype)
+    xs = _shift(x, x_prev)
+    r, k, v, w, g = _mix(params, x, xs)
+    rh, kh, vh = _heads(r, h, hs), _heads(k, h, hs), _heads(v, h, hs)
+    wh = _heads(w, h, hs)
+    u = params["bonus_u"].astype(jnp.float32)
+    s0 = state.s if state is not None else None
+    if use_chunked is None:
+        use_chunked = seq > 1 and seq % CHUNK == 0
+    if use_chunked:
+        y, s_fin = chunked(rh, kh, vh, wh, u, s0)
+    else:
+        y, s_fin = scan_reference(rh, kh, vh, wh, u, s0)
+    y = y.reshape(b, seq, d).astype(x.dtype) * g
+    out = y @ params["wo"]
+    new_state = RwkvState(s=s_fin, x_prev=x[:, -1, :])
+    return out, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RwkvState:
+    h, hs = num_heads(cfg), head_size(cfg)
+    return RwkvState(s=jnp.zeros((batch, h, hs, hs), jnp.float32),
+                     x_prev=jnp.zeros((batch, cfg.d_model), jnp.float32))
+
+
+def decode_step(params, cfg: ModelConfig, x, state: RwkvState):
+    """x: (B, 1, d). O(1) per token — the sub-quadratic decode path."""
+    return forward(params, cfg, x, state)

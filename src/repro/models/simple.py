@@ -1,0 +1,97 @@
+"""The paper's own evaluation models (Sec. 5): MLP (one hidden layer of 30
+units, MNIST) and a VGG-style CNN (BIRD-400). Used by the C-DFL
+reproduction experiments and benchmarks tables 1-4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLPConfig, VGGConfig
+
+
+# --- MLP (paper Sec. 5.4.1) -------------------------------------------------
+
+def mlp_init(rng, cfg: MLPConfig):
+    r1, r2 = jax.random.split(rng)
+    s1 = cfg.input_dim ** -0.5
+    s2 = cfg.hidden ** -0.5
+    return {
+        "w1": jax.random.normal(r1, (cfg.input_dim, cfg.hidden)) * s1,
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(r2, (cfg.hidden, cfg.num_classes)) * s2,
+        "b2": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def mlp_forward(params, x):
+    """x: (B, input_dim) -> logits (B, classes)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# --- VGG-style CNN (paper Sec. 5.4.2, reduced input size) --------------------
+
+def vgg_init(rng, cfg: VGGConfig):
+    params = {"stages": []}
+    c_in = cfg.channels
+    rs = jax.random.split(rng, len(cfg.stages) + 1)
+    for i, c_out in enumerate(cfg.stages):
+        r1, r2 = jax.random.split(rs[i])
+        fan = 3 * 3 * c_in
+        stage = {
+            "conv1": jax.random.normal(r1, (3, 3, c_in, c_out)) * fan**-0.5,
+            "conv2": jax.random.normal(
+                r2, (3, 3, c_out, c_out)) * (3 * 3 * c_out) ** -0.5,
+        }
+        params["stages"].append(stage)
+        c_in = c_out
+    feat = cfg.image_size // (2 ** len(cfg.stages))
+    flat = feat * feat * cfg.stages[-1]
+    r_fc = rs[-1]
+    params["fc_w"] = jax.random.normal(
+        r_fc, (flat, cfg.num_classes)) * flat ** -0.5
+    params["fc_b"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def vgg_forward(params, x):
+    """x: (B, H, W, C) -> logits. VGG pattern: [conv-conv-maxpool] stages."""
+    for stage in params["stages"]:
+        x = jax.nn.relu(_conv(x, stage["conv1"]))
+        x = jax.nn.relu(_conv(x, stage["conv2"]))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+# --- shared loss/accuracy -----------------------------------------------------
+
+def xent_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def accuracy(logits, labels):
+    return (logits.argmax(-1) == labels).mean()
+
+
+def make_mlp_loss(cfg: MLPConfig):
+    def loss(params, batch):
+        x, y = batch["x"], batch["y"]
+        return xent_loss(mlp_forward(params, x), y)
+    return loss
+
+
+def make_vgg_loss(cfg: VGGConfig):
+    def loss(params, batch):
+        x, y = batch["x"], batch["y"]
+        return xent_loss(vgg_forward(params, x), y)
+    return loss

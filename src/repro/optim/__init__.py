@@ -1,0 +1,2 @@
+from repro.optim.adam import AdamState, Optimizer, adam, global_norm, sgd  # noqa: F401
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,107 @@
+"""Optimizers in plain JAX (no optax dependency).
+
+Adam follows the paper's eq. (8) exactly:
+    m_{t+1} = b1 m_t + (1-b1) g
+    v_{t+1} = b2 v_t + (1-b2) g^2        (paper writes grad^2 as ∇²L)
+    W_{t+1} = W_t - lr * sqrt(1-b2^t)/(1-b1^t) * m_{t+1}/(sqrt(v_{t+1})+eps)
+which is textbook Adam with the two bias corrections folded into one scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array          # int32
+    m: object                # pytree like params
+    v: object
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable         # (grads, state, params) -> (new_params, state)
+
+
+def adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-7, weight_decay: float = 0.0,
+         grad_clip: float = 0.0) -> Optimizer:
+    """learning_rate: float or callable(step)->float."""
+
+    def lr_at(step):
+        if callable(learning_rate):
+            return learning_rate(step)
+        return learning_rate
+
+    def init(params) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params)
+        m = zeros
+        v = jax.tree.map(jnp.zeros_like, zeros)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+    def update(grads, state: AdamState, params):
+        if grad_clip > 0.0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        b1t = jnp.asarray(b1, jnp.float32) ** tf
+        b2t = jnp.asarray(b2, jnp.float32) ** tf
+        corr = jnp.sqrt(1.0 - b2t) / (1.0 - b1t)          # paper eq. (8)
+        lr = lr_at(t)
+
+        def upd(m, v, g, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1.0 - b1) * g32
+            v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+            delta = lr * corr * m_new / (jnp.sqrt(v_new) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                delta = delta + lr * weight_decay * p32
+            return m_new, v_new, (p32 - delta).astype(p.dtype)
+
+        flat_m, treedef = jax.tree.flatten(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        flat_g = jax.tree.leaves(grads)
+        flat_p = jax.tree.leaves(params)
+        out = [upd(m, v, g, p)
+               for m, v, g, p in zip(flat_m, flat_v, flat_g, flat_p)]
+        new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_p = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamState(step=t, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(learning_rate, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=m)
+
+    def update(grads, state, params):
+        t = state.step + 1
+        lr = learning_rate(t) if callable(learning_rate) else learning_rate
+
+        def upd(m, g, p):
+            g32 = g.astype(jnp.float32)
+            m_new = momentum * m + g32
+            return m_new, (p.astype(jnp.float32) - lr * m_new).astype(p.dtype)
+
+        pairs = jax.tree.map(upd, state.m, grads, params)
+        new_m = jax.tree.map(lambda x: x[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.map(lambda x: x[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamState(step=t, m=new_m, v=state.v)
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))

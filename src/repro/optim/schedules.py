@@ -1,0 +1,27 @@
+"""Learning-rate schedules (plain callables of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def linear_decay(peak: float, warmup: int, total: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return jnp.where(s < warmup, warm, peak * (1 - prog))
+    return fn

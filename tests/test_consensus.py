@@ -1,0 +1,77 @@
+"""Consensus step (paper eq. 5) semantics and convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, topology
+
+
+def _params(k=4, seed=0):
+    r = jax.random.PRNGKey(seed)
+    r1, r2 = jax.random.split(r)
+    return {"w": jax.random.normal(r1, (k, 8, 3)),
+            "b": jax.random.normal(r2, (k, 5))}
+
+
+def test_eq5_matches_manual():
+    k = 4
+    params = _params(k)
+    adj = jnp.asarray(topology.adjacency("ring", k))
+    ratios = jnp.asarray([0.3, 0.8, 0.6, 0.9])
+    eta = topology.cnd_mixing(adj, ratios)
+    gamma = 0.4
+    out = consensus.consensus_step(params, eta, gamma)
+    w = np.asarray(params["w"])
+    e = np.asarray(eta)
+    expect = w.copy()
+    for kk in range(k):
+        acc = np.zeros_like(w[kk])
+        for i in range(k):
+            acc += e[kk, i] * (w[i] - w[kk])
+        expect[kk] = w[kk] + gamma * acc
+    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-5)
+
+
+def test_consensus_preserves_mean_with_symmetric_weights():
+    params = _params(6, seed=1)
+    adj = jnp.asarray(topology.adjacency("ring", 6))
+    eta = topology.uniform_mixing(adj)      # symmetric for a ring
+    out = consensus.consensus_step(params, eta, 0.5)
+    np.testing.assert_allclose(np.asarray(out["w"].mean(0)),
+                               np.asarray(params["w"].mean(0)), atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["ring", "full", "chain"])
+def test_disagreement_converges_to_zero(kind):
+    k = 5
+    params = _params(k, seed=2)
+    adj = jnp.asarray(topology.adjacency(kind, k))
+    eta = topology.uniform_mixing(adj)
+    d0 = float(consensus.disagreement(params))
+    final, ds = consensus.simulate_rounds(params, eta, 0.5, rounds=60)
+    assert float(consensus.disagreement(final)) < 1e-3 * d0
+    # monotone-ish decay
+    ds = np.asarray(ds)
+    assert ds[-1] < ds[0]
+
+
+def test_partial_consensus_mixes_prefix_only():
+    params = _params(4, seed=3)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    out = consensus.partial_consensus_step(params, eta, 0.5, fraction=0.5)
+    leaves_in = jax.tree.leaves(params)
+    leaves_out = jax.tree.leaves(out)
+    changed = [not np.allclose(a, b)
+               for a, b in zip(leaves_in, leaves_out)]
+    assert changed == [True, False]          # 1 of 2 leaves mixed
+
+
+def test_gamma_zero_is_identity():
+    params = _params(4)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    out = consensus.consensus_step(params, eta, 0.0)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"]), rtol=1e-6)

@@ -1,0 +1,143 @@
+"""Pallas kernel sweeps (interpret mode on CPU) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cnd_sketch import cnd_bitmaps, cnd_popcount
+from repro.kernels.consensus_mix import consensus_mix
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels import ops
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (1, 128, 128, 2, 2, 64),     # MHA
+    (2, 256, 256, 4, 2, 64),     # GQA 2:1
+    (1, 128, 128, 8, 1, 32),     # MQA
+    (1, 512, 512, 2, 2, 128),    # long, wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, sq, sk, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(sq + h), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, window=None,
+                          block_q=64, block_k=64, interpret=True)
+    exp = ref.flash_attention(q, k, v, causal=True, window=None)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    exp = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_square_blocks():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    # cross attention (no causal): Sq != Sk
+    out = flash_attention(q, k, v, causal=False, window=None,
+                          block_q=32, block_k=128, interpret=True)
+    exp = ref.flash_attention(q, k, v, causal=False, window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --- CND sketch --------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f,m,h", [(64, 4, 1024, 3), (500, 8, 8192, 3),
+                                     (1000, 16, 4096, 2), (37, 5, 2048, 4)])
+def test_cnd_bitmaps_sweep(n, f, m, h):
+    r = np.random.default_rng(n)
+    items = jnp.asarray(r.integers(0, 1 << 16, size=(n, f)).astype(np.int32))
+    out = cnd_bitmaps(items, h, m, interpret=True)
+    exp = ref.cnd_bitmaps(items, h, m)
+    assert (np.asarray(out) == np.asarray(exp)).all()
+
+
+def test_cnd_popcount_kernel():
+    r = np.random.default_rng(1)
+    bm = jnp.asarray(r.integers(0, 1 << 32, size=(3, 256),
+                                dtype=np.uint64).astype(np.uint32))
+    out = cnd_popcount(bm, interpret=True)
+    exp = ref.cnd_popcount(bm)
+    assert (np.asarray(out) == np.asarray(exp)).all()
+
+
+def test_cnd_kernel_end_to_end_cardinality():
+    """Kernel bitmaps drive the same cardinality estimate as the oracle."""
+    from repro.core import sketch
+    r = np.random.default_rng(2)
+    pool = r.integers(0, 1 << 20, size=(300, 6)).astype(np.int32)
+    items = jnp.asarray(np.concatenate([pool, pool[:100]]))
+    bm = cnd_bitmaps(items, 3, 8192, interpret=True)
+    est = float(sketch.cardinality(bm, "linear_counting"))
+    assert abs(est - 300) / 300 < 0.1
+
+
+# --- consensus mix -----------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n,dtype", [
+    (256, 2, jnp.float32), (512, 4, jnp.float32), (256, 2, jnp.bfloat16),
+    (1024, 8, jnp.float32),
+])
+def test_consensus_mix_sweep(rows, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(rows + n), 3)
+    w = jax.random.normal(ks[0], (rows, 128)).astype(dtype)
+    nb = jax.random.normal(ks[1], (n, rows, 128)).astype(dtype)
+    eta = jax.nn.softmax(jax.random.normal(ks[2], (n,)))
+    out = consensus_mix(w, nb, eta, 0.4, block_rows=128, interpret=True)
+    exp = ref.consensus_mix(w, nb, eta, 0.4)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_consensus_mix_pytree_wrapper():
+    w = {"a": jnp.ones((33, 5)), "b": jnp.arange(100.0)}
+    nb = {"a": jnp.zeros((3, 33, 5)),
+          "b": jnp.stack([jnp.arange(100.0)] * 3)}
+    eta = jnp.asarray([0.5, 0.25, 0.25])
+    out = ops.consensus_mix_pytree(w, nb, eta, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]),
+                               np.arange(100.0), atol=1e-6)
+
+
+# --- rwkv6 chunked kernel ----------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,d,chunk", [
+    (1, 64, 1, 64, 16), (2, 128, 3, 64, 32), (1, 256, 2, 128, 64),
+])
+def test_rwkv6_kernel_sweep(b, s, h, d, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    r = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, d))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    y, sf = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    ye, se = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(se),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,94 @@
+"""Sharding-rule unit tests (no devices needed — rules are shape-based)."""
+from types import SimpleNamespace
+
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding
+
+
+def _mesh(axes: dict):
+    return SimpleNamespace(axis_names=tuple(axes), shape=dict(axes))
+
+
+FED = _mesh({"fed": 4, "dp": 4, "tp": 16})
+FED_POD = _mesh({"pod": 2, "fed": 2, "dp": 8, "tp": 16})
+PROD = _mesh({"data": 16, "model": 16})
+
+
+def test_big_2d_weight_gets_tp_and_dp():
+    spec = sharding.fed_param_spec((4, 4096, 14336), FED)
+    assert spec == P("fed", "dp", "tp")
+
+
+def test_small_param_replicated():
+    spec = sharding.fed_param_spec((4, 4096), FED)      # norm scale
+    assert spec == P("fed", None)
+
+
+def test_fsdp_off_drops_dp():
+    spec = sharding.fed_param_spec((4, 4096, 14336), FED, fsdp=False)
+    assert spec == P("fed", None, "tp")
+
+
+def test_vocab_table_row_parallel():
+    spec = sharding.fed_param_spec((4, 151936, 2048), FED, name="table")
+    assert spec[1] == "tp"                              # vocab sharded
+
+
+def test_row_parallel_names():
+    # wo (d_in, d_out): tp on d_in so the head-sharded activation is
+    # consumed locally (Megatron row-parallel)
+    assert sharding.fed_param_spec((4, 36, 4096, 4096), FED,
+                                   name="wo")[2] == "tp"
+    assert sharding.fed_param_spec((4, 36, 14336, 4096), FED,
+                                   name="w_down") == \
+        sharding.fed_param_spec((4, 36, 14336, 4096), FED, name="w_down")
+    spec = sharding.fed_param_spec((4, 36, 14336, 4096), FED,
+                                   name="w_down")
+    assert spec[2] == "tp"
+
+
+def test_col_parallel_default():
+    spec = sharding.fed_param_spec((4, 36, 4096, 14336), FED, name="wq")
+    assert spec[3] == "tp"
+
+
+def test_odd_vocab_falls_back():
+    spec = sharding.fed_param_spec((4, 49155, 4096), FED, name="table")
+    assert spec == P("fed", None, "tp")                 # 49155 indivisible
+
+
+def test_multipod_fed_axes():
+    spec = sharding.fed_param_spec((4, 4096, 4096), FED_POD)
+    assert spec[0] == ("pod", "fed")
+
+
+def test_serve_param_spec():
+    spec = sharding.serve_param_spec((4096, 14336), PROD)
+    assert spec == P("data", "model")
+    assert sharding.serve_param_spec((4096,), PROD) == P(None)
+
+
+def test_fed_batch_spec():
+    assert sharding.fed_batch_spec((4, 64, 4096), FED) == \
+        P("fed", "dp", None)
+    # batch not divisible by dp -> unsharded batch dim
+    assert sharding.fed_batch_spec((4, 3, 4096), FED) == \
+        P("fed", None, None)
+
+
+def test_serve_batch_spec():
+    assert sharding.serve_batch_spec((128,), PROD) == P(("data",))
+    assert sharding.serve_batch_spec((1,), PROD) == P(None)
+
+
+def test_cache_spec_kv_heads_over_model():
+    # (L, B, S, KV=32, D): kv divisible by model=16
+    spec = sharding.cache_spec((32, 128, 32768, 32, 128), PROD)
+    assert spec[1] == "data" and spec[3] == "model"
+
+
+def test_cache_spec_seq_fallback():
+    # KV=8 not divisible -> seq dim gets model
+    spec = sharding.cache_spec((36, 128, 32768, 8, 128), PROD)
+    assert spec[3] is None and spec[2] == "model"

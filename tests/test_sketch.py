@@ -1,0 +1,105 @@
+"""CND sketch (paper Alg. 1): unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch
+
+
+def _items(n, distinct, seed=0, f=4):
+    r = np.random.default_rng(seed)
+    pool = r.integers(0, 1 << 20, size=(distinct, f)).astype(np.int32)
+    idx = np.concatenate([np.arange(distinct),
+                          r.integers(0, distinct, size=n - distinct)])
+    r.shuffle(idx)
+    return jnp.asarray(pool[idx])
+
+
+def test_bitmap_scatter_matches_onehot():
+    items = _items(300, 120)
+    a = sketch.build_bitmaps(items, 3, 4096)
+    b = sketch.build_bitmaps_onehot(items, 3, 4096)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_popcount_known_values():
+    x = jnp.asarray([0, 1, 3, 0xFFFFFFFF, 0x80000000], jnp.uint32)
+    assert np.asarray(sketch.popcount(x)).tolist() == [0, 1, 2, 32, 1]
+
+
+@pytest.mark.parametrize("distinct", [50, 200, 800])
+def test_cardinality_accuracy(distinct):
+    items = _items(1000, distinct)
+    bm = sketch.build_bitmaps(items, 3, 8192)
+    est = float(sketch.cardinality(bm, "linear_counting"))
+    assert abs(est - distinct) / distinct < 0.12
+    paper = float(sketch.cardinality(bm, "paper_mean"))
+    assert paper <= distinct * 1.05          # collisions only undercount
+
+
+def test_duplicates_do_not_change_bitmap():
+    items = _items(100, 100)
+    dup = jnp.concatenate([items, items, items[:13]])
+    a = sketch.build_bitmaps(items)
+    b = sketch.build_bitmaps(dup)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_union_cardinality_bounds():
+    a_items, b_items = _items(200, 200, seed=1), _items(150, 150, seed=2)
+    bma, bmb = sketch.build_bitmaps(a_items), sketch.build_bitmaps(b_items)
+    union = float(sketch.union_cardinality(bma, bmb, "linear_counting"))
+    ca = float(sketch.cardinality(bma, "linear_counting"))
+    cb = float(sketch.cardinality(bmb, "linear_counting"))
+    assert union >= max(ca, cb) - 1
+    assert union <= ca + cb + 20
+    # difference estimate positive and ~|B|
+    diff = float(sketch.difference_estimate(bma, bmb, "linear_counting"))
+    assert 100 <= diff <= 200
+
+
+def test_distinct_ratio_tracks_redundancy():
+    full = sketch.sketch_dataset(_items(400, 400, seed=3))
+    half = sketch.sketch_dataset(_items(400, 200, seed=3))
+    r_full = float(sketch.distinct_ratio(full))
+    r_half = float(sketch.distinct_ratio(half))
+    assert r_full > 0.9
+    assert 0.35 < r_half < 0.6
+
+
+def test_simhash_deterministic_and_binary():
+    items = _items(64, 64)
+    s1 = sketch.simhash(items)
+    s2 = sketch.simhash(items)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert set(np.asarray(s1).tolist()) <= {0, 1}
+
+
+def test_signature_distance_zero_for_same_data():
+    items = _items(64, 64)
+    d = sketch.signature_distance(sketch.simhash(items),
+                                  sketch.simhash(items))
+    assert int(d) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 300), frac=st.floats(0.1, 1.0))
+def test_property_estimate_monotone_in_distinct(n, frac):
+    """More distinct items -> more (or equal) set bits."""
+    distinct = max(1, int(n * frac))
+    small = _items(n, max(1, distinct // 2), seed=n)
+    large = _items(n, distinct, seed=n)
+    sb_small = int(sketch.set_bits(sketch.build_bitmaps(small)).sum())
+    sb_large = int(sketch.set_bits(sketch.build_bitmaps(large)).sum())
+    assert sb_small <= sb_large + 3   # hash collisions allow tiny slack
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([1024, 4096, 8192]),
+       h=st.integers(1, 4), n=st.integers(1, 200))
+def test_property_bitmap_shape_and_bound(m, h, n):
+    items = _items(max(n, 1), max(n // 2, 1), seed=m + n)
+    bm = sketch.build_bitmaps(items, h, m)
+    assert bm.shape == (h, m // 32)
+    assert int(sketch.set_bits(bm).max()) <= min(n, m)

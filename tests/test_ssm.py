@@ -1,0 +1,103 @@
+"""SSM layers: chunked-parallel formulations vs sequential references, and
+state-continuity (prefill -> decode handoff)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_arch
+from repro.models import mamba, rwkv
+
+
+def _rwkv_inputs(b, s, h, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    w = jnp.exp(-jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, d))),
+                          1e-6, rwkv.MAX_LOG_DECAY))
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    s0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.3
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("b,s,h,d", [(1, 16, 1, 32), (2, 64, 3, 64),
+                                     (1, 128, 2, 16)])
+def test_rwkv_chunked_matches_scan(b, s, h, d):
+    r, k, v, w, u, s0 = _rwkv_inputs(b, s, h, d, seed=s)
+    yc, sc = rwkv.chunked(r, k, v, w, u, s0)
+    yr, sr = rwkv.scan_reference(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                               atol=5e-4, rtol=1e-3)
+
+
+def _mamba_inputs(b, s, h, d, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    xh = jax.random.normal(ks[0], (b, s, h, d))
+    bt = jax.random.normal(ks[1], (b, s, n))
+    ct = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a = jnp.exp(jnp.linspace(0.0, 1.5, h))
+    h0 = jax.random.normal(ks[5], (b, h, d, n)) * 0.3
+    return xh, bt, ct, dt, a, h0
+
+
+@pytest.mark.parametrize("b,s,h,d,n", [(1, 16, 1, 32, 8), (2, 64, 4, 64, 16),
+                                       (1, 128, 2, 16, 4)])
+def test_mamba_chunked_matches_scan(b, s, h, d, n):
+    xh, bt, ct, dt, a, h0 = _mamba_inputs(b, s, h, d, n, seed=s)
+    yc, sc = mamba.chunked(xh, bt, ct, dt, a, h0)
+    yr, sr = mamba.scan_reference(xh, bt, ct, dt, a, h0)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_rwkv_prefill_then_decode_continuity():
+    """forward(S tokens) state == S decode steps state (rwkv block level)."""
+    cfg = get_smoke_arch("rwkv6-7b")
+    rng = jax.random.PRNGKey(0)
+    params = rwkv.init(rng, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out_full, st_full = rwkv.forward(params, cfg, x)
+    st = rwkv.init_state(cfg, 2)
+    outs = []
+    for t in range(32):
+        o, st = rwkv.decode_step(params, cfg, x[:, t:t + 1], st)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(out_full),
+                               atol=5e-4, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(st.s), np.asarray(st_full.s),
+                               atol=5e-4, rtol=1e-2)
+
+
+def test_mamba_prefill_then_decode_continuity():
+    cfg = get_smoke_arch("zamba2-1.2b")
+    rng = jax.random.PRNGKey(0)
+    params = mamba.init(rng, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out_full, st_full = mamba.forward(params, cfg, x)
+    st = mamba.init_state(cfg, 2)
+    outs = []
+    for t in range(32):
+        o, st = mamba.decode_step(params, cfg, x[:, t:t + 1], st)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(out_full),
+                               atol=5e-4, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_full.h),
+                               atol=5e-4, rtol=1e-2)
+
+
+def test_rwkv_decay_clamp_active():
+    """The chunked path relies on w >= exp(-MAX_LOG_DECAY)."""
+    cfg = get_smoke_arch("rwkv6-7b")
+    params = rwkv.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model)) * 50
+    xs = rwkv._shift(x, jnp.zeros((1, cfg.d_model)))
+    _, _, _, w, _ = rwkv._mix(params, x, xs)
+    assert float(w.min()) >= np.exp(-rwkv.MAX_LOG_DECAY) - 1e-6

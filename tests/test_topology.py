@@ -1,0 +1,63 @@
+"""Topology / mixing-weight tests (paper eqs. 6-7)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+
+
+@pytest.mark.parametrize("kind,k", [("ring", 4), ("ring", 7), ("full", 5),
+                                    ("chain", 4)])
+def test_adjacency_symmetric_no_self(kind, k):
+    a = topology.adjacency(kind, k)
+    assert (a == a.T).all()
+    assert (np.diag(a) == 0).all()
+    # connected: powers of (A+I) become all-positive
+    m = np.linalg.matrix_power(a + np.eye(k), k)
+    assert (m > 0).all()
+
+
+def test_cnd_mixing_rows_normalized():
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    ratios = jnp.asarray([0.2, 0.9, 0.5, 0.7])
+    eta = topology.cnd_mixing(adj, ratios)
+    np.testing.assert_allclose(np.asarray(eta.sum(1)), 1.0, rtol=1e-6)
+    assert (np.asarray(eta)[adj == 0] == 0).all()
+    # eq.6: neighbor with higher distinct ratio gets higher weight
+    # node 0 neighbors are 1 (0.9) and 3 (0.7)
+    assert float(eta[0, 1]) > float(eta[0, 3])
+
+
+def test_uniform_and_datasize_mixing():
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    u = topology.uniform_mixing(adj)
+    np.testing.assert_allclose(np.asarray(u[0, 1]), 0.5, rtol=1e-6)
+    sizes = jnp.asarray([100.0, 300.0, 100.0, 100.0])
+    d = topology.datasize_mixing(adj, sizes)
+    assert float(d[0, 1]) == pytest.approx(0.75, rel=1e-5)
+
+
+def test_consensus_matrix_row_stochastic():
+    adj = jnp.asarray(topology.adjacency("ring", 6))
+    eta = topology.uniform_mixing(adj)
+    a = topology.consensus_matrix(eta, gamma=0.4)
+    np.testing.assert_allclose(np.asarray(a.sum(1)), 1.0, rtol=1e-5)
+    assert (np.asarray(a) >= 0).all()
+
+
+def test_gamma_bound():
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    assert float(topology.max_row_sum(eta)) == pytest.approx(1.0)
+
+
+def test_spectral_gap_positive_on_ring():
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    a = topology.consensus_matrix(topology.uniform_mixing(adj), 0.5)
+    assert topology.spectral_gap(a) > 0.01
+
+
+def test_metropolis_symmetric():
+    adj = jnp.asarray(topology.adjacency("chain", 5))
+    w = topology.metropolis_mixing(adj)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w).T, rtol=1e-6)
