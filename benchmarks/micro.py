@@ -1,9 +1,11 @@
 """Micro-benchmarks: CND sketch throughput, fused consensus mix, kernels
 (interpret mode on CPU — relative numbers; TPU compiles the same bodies),
-and the end-to-end consensus round latency.
+the flat-buffer consensus engine vs the seed per-leaf path, and the
+scanned multi-round driver vs the seed Python round loop.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -18,6 +20,18 @@ def _time(fn, *args, iters=5, warmup=2):
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _median_time(fn, *args, reps=7, warmup=2):
+    """Median-of-reps for noisy multi-ms measurements."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6  # us
 
 
 def bench_sketch():
@@ -103,3 +117,193 @@ def bench_consensus_round():
     us = _time(round_fn, state, iters=3)
     return [{"name": "cdfl_round_mlp_4nodes_10steps", "us_per_call": us,
              "derived": f"{4 * 10 * 32 / us * 1e6:.0f} samples/s"}]
+
+
+# --------------------------------------------------------------------------
+# Flat-buffer consensus engine vs the seed per-leaf path
+# --------------------------------------------------------------------------
+
+def _stacked_pytree(shapes, k=4, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"p{i:03d}": jax.random.normal(ks[i], (k,) + s)
+            for i, s in enumerate(shapes)}
+
+
+def bench_flat_consensus(quick: bool = False):
+    """One fused (K,K)@(K,P) mix vs one einsum per leaf (seed path).
+
+    Two pytrees: the paper MLP (4 leaves — the flat win is modest) and a
+    transformer-like tree (many leaves incl. bias-sized — the per-leaf
+    dispatch cost the flat engine removes)."""
+    from repro.core import consensus, topology
+    from repro.kernels import ref
+    rows = []
+    mlp_shapes = [(784, 30), (30,), (30, 10), (10,)]
+    xf_shapes = []
+    for _ in range(12):                      # 12 blocks x 6 leaves + embeds
+        xf_shapes += [(128, 128), (128,), (128, 256), (256,),
+                      (256, 128), (128,)]
+    xf_shapes += [(256, 128), (128, 256)]
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.cnd_mixing(adj, jnp.asarray([0.3, 0.8, 0.6, 0.9]))
+
+    cases = [("mlp4leaf", mlp_shapes)]
+    if not quick:
+        cases.append(("xf74leaf", xf_shapes))
+    for tag, shapes in cases:
+        params = _stacked_pytree(shapes)
+        n_el = sum(int(np.prod(s)) for s in shapes)
+        flat_fn = jax.jit(lambda p, e: consensus.consensus_step(p, e, 0.4))
+        leaf_fn = jax.jit(lambda p, e: ref.consensus_step_pytree(p, e, 0.4))
+        us_flat = _median_time(flat_fn, params, eta)
+        us_leaf = _median_time(leaf_fn, params, eta)
+        rows.append({"name": f"consensus_step_flat_{tag}",
+                     "us_per_call": us_flat,
+                     "derived": f"{n_el * 4 / us_flat:.0f} params/us"})
+        rows.append({"name": f"consensus_step_perleaf_{tag}",
+                     "us_per_call": us_leaf,
+                     "derived": f"flat/perleaf speedup "
+                                f"{us_leaf / us_flat:.2f}x"})
+    return rows
+
+
+def bench_scan_consensus_rounds(quick: bool = False):
+    """Pure consensus iteration, 100 rounds: scanned flat engine
+    (simulate_rounds) vs the seed Python loop of per-leaf steps."""
+    from repro.core import consensus, topology
+    from repro.kernels import ref
+    params = _stacked_pytree([(784, 30), (30,), (30, 10), (10,)])
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    rounds = 20 if quick else 100
+
+    def scanned(p):
+        final, ds = consensus.simulate_rounds(p, eta, 0.5, rounds=rounds)
+        return jax.tree.leaves(final)[0]
+
+    step = jax.jit(lambda p: ref.consensus_step_pytree(p, eta, 0.5))
+
+    def loop(p):
+        for _ in range(rounds):
+            p = step(p)
+            _ = float(ref.disagreement_pytree(p))   # per-round metric sync
+        return jax.tree.leaves(p)[0]
+
+    us_scan = _median_time(scanned, params, reps=5)
+    us_loop = _median_time(loop, params, reps=5)
+    return [
+        {"name": f"consensus_{rounds}rounds_scan_flat",
+         "us_per_call": us_scan,
+         "derived": f"{us_scan / rounds:.1f} us/round"},
+        {"name": f"consensus_{rounds}rounds_loop_perleaf",
+         "us_per_call": us_loop,
+         "derived": f"scan is {us_loop / us_scan:.2f}x faster"},
+    ]
+
+
+def bench_scan_rounds(quick: bool = False):
+    """Multi-round C-DFL run (4 nodes, paper MLP, 10 local steps):
+    device-resident scan (run_rounds) vs the SEED driver — per-round
+    Python loop with per-leaf consensus/disagreement, host-numpy
+    FederatedBatcher sampling, H2D transfer, one jit dispatch and a
+    metrics host-sync per round (exactly what the seed launch/train.py
+    and benchmark loop paid every round)."""
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines, topology
+    from repro.data import pipeline, synthetic
+    from repro.kernels import ref
+    from repro.models import simple
+    from repro.optim import adam as make_adam
+
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 5
+    nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 10)
+    loss_fn = simple.make_mlp_loss(MLP_CONFIG)
+    tr = baselines.cdfl(lambda p, b: loss_fn(p, b),
+                        FedConfig(num_nodes=4, local_steps=10),
+                        TrainConfig(learning_rate=1e-3))
+    state0 = tr.init(jax.random.PRNGKey(0),
+                     lambda r: simple.mlp_init(r, MLP_CONFIG),
+                     jnp.asarray(batcher.node_items()))
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+
+    # --- seed path: per-round loop over the seed round (per-leaf ops) ----
+    opt = make_adam(1e-3, 0.9, 0.999, 1e-7, 0.0, 0.0)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    ratios = state0.ratios
+
+    @jax.jit
+    def seed_round(params, opt_state, batches):
+        eta = topology.cnd_mixing(adj, ratios)
+        gamma = jnp.minimum(
+            0.5, 0.99 / jnp.maximum(topology.max_row_sum(eta), 1e-6))
+        phi = ref.consensus_step_pytree(params, eta, gamma)
+
+        def one_node(p, o, bs):
+            def step(carry, batch):
+                pp, oo = carry
+                l, g = jax.value_and_grad(loss_fn)(pp, batch)
+                pp, oo = opt.update(g, oo, pp)
+                return (pp, oo), l
+            (p, o), losses = jax.lax.scan(step, (p, o), bs)
+            return p, o, losses.mean()
+
+        p, o, l = jax.vmap(one_node)(phi, opt_state, batches)
+        return p, o, l, ref.disagreement_pytree(p)
+
+    import io
+    log = io.StringIO()
+
+    def run_seed_loop():
+        p, o = state0.params, state0.opt
+        for r in range(rounds):
+            rb = batcher.next_round()
+            batch = {"x": jnp.asarray(rb["x"]), "y": jnp.asarray(rb["y"])}
+            p, o, l, d = seed_round(p, o, batch)
+            loss = np.asarray(l)                 # per-round metrics sync +
+            print(f"round {r:3d} loss/node={np.round(loss, 3)} "
+                  f"mean={loss.mean():.4f} "
+                  f"disagree={float(d):.2e}", file=log)   # log line, as the
+        return jax.tree.leaves(p)[0]             # seed launch loop did
+
+    # --- flat-engine path: one scan over all rounds ----------------------
+    # run_rounds donates its state, so pre-build one fresh state per call
+    # (init cost — CND sketching — stays outside the timed region).
+    states = [tr.init(jax.random.PRNGKey(0),
+                      lambda r: simple.mlp_init(r, MLP_CONFIG),
+                      jnp.asarray(batcher.node_items())) for _ in range(8)]
+
+    def run_scan():
+        s, _m = tr.run_rounds(states.pop(), data, rounds,
+                              rng=jax.random.PRNGKey(7))
+        return jax.tree.leaves(s.params)[0]
+
+    # interleave the two paths so background-load drift on the box hits
+    # both equally; report medians
+    jax.block_until_ready(run_seed_loop())
+    jax.block_until_ready(run_scan())
+    t_loop, t_scan = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_seed_loop())
+        t_loop.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_scan())
+        t_scan.append(time.perf_counter() - t0)
+    us_loop = statistics.median(t_loop) * 1e6
+    us_scan = statistics.median(t_scan) * 1e6
+    samples = 4 * 10 * 32 * rounds
+    return [
+        {"name": f"cdfl_{rounds}rounds_loop_perleaf_seed",
+         "us_per_call": us_loop,
+         "derived": f"{us_loop / rounds:.0f} us/round"},
+        {"name": f"cdfl_{rounds}rounds_scan_flat",
+         "us_per_call": us_scan,
+         "derived": f"{us_scan / rounds:.0f} us/round; "
+                    f"{samples / us_scan * 1e6:.0f} samples/s; "
+                    f"scan is {us_loop / us_scan:.2f}x faster than "
+                    f"seed loop"},
+    ]

@@ -1,12 +1,16 @@
 """Benchmark harness: one function per paper table + micro benches.
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and a
-readable paper-tables report.
+readable paper-tables report. ``--json PATH`` additionally writes the
+micro rows as machine-readable JSON (the perf trajectory future PRs are
+judged against — see BENCH_consensus.json).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-vgg]
+      [--micro-only] [--json BENCH_consensus.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -15,17 +19,41 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer rounds (CI mode)")
     ap.add_argument("--skip-vgg", action="store_true")
+    ap.add_argument("--micro-only", action="store_true",
+                    help="skip the paper tables (perf rows only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write micro rows as JSON "
+                         "[{name, us_per_call, derived}, ...]")
     args = ap.parse_args()
 
     from benchmarks import micro, paper_tables
 
+    json_rows = []
     print("name,us_per_call,derived")
-    for fn in (micro.bench_sketch, micro.bench_consensus_mix,
-               micro.bench_rwkv_formulations, micro.bench_consensus_round):
-        for row in fn():
+    quick_kw = {"quick": True} if args.quick else {}
+    for fn, kw in ((micro.bench_sketch, {}),
+                   (micro.bench_consensus_mix, {}),
+                   (micro.bench_flat_consensus, quick_kw),
+                   (micro.bench_scan_consensus_rounds, quick_kw),
+                   (micro.bench_rwkv_formulations, {}),
+                   (micro.bench_consensus_round, {}),
+                   (micro.bench_scan_rounds, quick_kw)):
+        for row in fn(**kw):
+            json_rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},"
                   f"{row['derived']}")
             sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": r["name"],
+                        "us_per_call": round(float(r["us_per_call"]), 1),
+                        "derived": r["derived"]} for r in json_rows],
+                      f, indent=1)
+        print(f"# wrote {len(json_rows)} rows to {args.json}")
+
+    if args.micro_only:
+        return
 
     # --- CND accuracy (mechanism behind paper eq. 6-7) ---------------------
     print("\n# CND cardinality estimation (vs ground truth)")
@@ -56,7 +84,7 @@ def main() -> None:
             print(f"curve_vgg,{alg},{pts}")
 
     # --- roofline table (reads the dry-run sweep output if present) --------
-    import json, os
+    import os
     for path in ("dryrun_singlepod.json", "dryrun_multipod.json"):
         if os.path.exists(path):
             with open(path) as f:

@@ -1,2 +1,3 @@
 # The paper's primary contribution: CND sketch + consensus DFL.
-from repro.core import baselines, cdfl, consensus, sketch, topology  # noqa: F401
+from repro.core import (baselines, cdfl, consensus, flatten,  # noqa: F401
+                        sketch, topology)

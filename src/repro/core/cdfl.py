@@ -2,23 +2,34 @@
 
 One federated **round** =
   1. exchange (params, CND bitmaps) with graph neighbors,
-  2. consensus-mix with CND-derived weights (eqs. 5-7),
+  2. consensus-mix with CND-derived weights (eqs. 5-7) — one fused
+     flat-buffer operation (repro.core.flatten), not one einsum per leaf,
   3. ``local_steps`` Adam updates on local minibatches (eq. 8, ModelUpdate).
 
 The trainer is generic over the model: it takes ``loss_fn(params, batch)``
 and a per-node initializer. Node-stacked pytrees (leading K dim) make the
 same code run vmapped on one host (simulation / tests / paper repro) or
 under shard_map on a mesh (see repro.launch.train).
+
+Two drivers:
+  * ``Trainer.round`` — one jit'd round on host-fed batches (seed path);
+  * ``Trainer.run_rounds`` — device-resident multi-round scan: per-round
+    batch indices pre-sampled with ``jax.random``, batches gathered on
+    device from the resident datasets, the round-invariant mixing weights
+    hoisted out of the loop, and the full round loop run under ONE
+    ``jax.lax.scan`` with donated state buffers — no per-round jit
+    dispatch and no host-numpy batch transfer.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig, TrainConfig
-from repro.core import consensus, sketch, topology
+from repro.core import consensus, flatten, sketch, topology
 from repro.optim import adam
 
 
@@ -34,6 +45,7 @@ class Trainer(NamedTuple):
     init: Callable
     round: Callable           # (state, batches) -> (state, metrics)
     eta_fn: Callable          # state -> (K, K) mixing weights
+    run_rounds: Callable      # (state, data, num_rounds[, rng]) -> (state, metrics)
 
 
 def _node_sketches(node_items, fed: FedConfig):
@@ -58,6 +70,9 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         adj = jnp.asarray(topology.adjacency("full", fed.num_nodes))
     opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
                train.weight_decay, train.grad_clip)
+    # Partially unrolling the local-step scan lets XLA build larger fusion
+    # clusters (fewer per-op dispatches) without decode-time blowup.
+    local_unroll = max(1, min(2, fed.local_steps))
 
     def eta_fn(state: FedState) -> jax.Array:
         if fed.algorithm == "cdfl":
@@ -93,21 +108,77 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
                 pp, oo = opt.update(grads, oo, pp)
                 return (pp, oo), loss
-            (p, o), losses = jax.lax.scan(step, (p, o), bs)
+            (p, o), losses = jax.lax.scan(step, (p, o), bs,
+                                          unroll=local_unroll)
             return p, o, losses.mean()
         return jax.vmap(one_node)(params, opt_state, batches)
 
-    def round_fn(state: FedState, batches):
-        eta = eta_fn(state)
-        gamma = jnp.minimum(
-            fed.gamma, 0.99 / jnp.maximum(topology.max_row_sum(eta), 1e-6))
+    def local_updates_from_idx(params, opt_state, data, idx):
+        """Like ``local_updates``, but gathers each minibatch on device
+        from the resident datasets one step at a time (idx: (K, S, B)) —
+        no (K, S, B, ...) round-batch intermediate is ever materialized."""
+        def one_node(p, o, nd, ni):
+            def step(carry, i):
+                pp, oo = carry
+                batch = jax.tree.map(lambda a: a[i], nd)
+                loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
+                pp, oo = opt.update(grads, oo, pp)
+                return (pp, oo), loss
+            (p, o), losses = jax.lax.scan(step, (p, o), ni,
+                                          unroll=local_unroll)
+            return p, o, losses.mean()
+        return jax.vmap(one_node)(params, opt_state, data, idx)
 
+    def mix_buf(buf, sizes, eta, gamma, layout):
+        """The round's consensus exchange on the flat (K, P) buffer — one
+        fused (K,K)@(K,P) operation for every algorithm."""
+        if fed.algorithm == "fedavg":
+            # centralized reference: server average, weights E_i/sum E
+            w = sizes / sizes.sum()
+            a = jnp.broadcast_to(w[None, :],
+                                 (fed.num_nodes, fed.num_nodes))
+            return flatten.apply_matrix_flat(buf, a)
+        if fed.algorithm == "cdfa_m":
+            prefix = flatten.prefix_length(layout, fed.cdfa_fraction)
+            return flatten.partial_mix_flat(buf, eta, gamma, prefix)
+        # cdfl, cfa, metropolis — eq. (5)
+        return flatten.mix_flat(buf, eta, gamma)
+
+    def mix_params(state: FedState, eta, gamma):
+        """Pytree wrapper over :func:`mix_buf` (one pack/unpack)."""
+        buf, layout = flatten.flatten(state.params)
+        return flatten.unflatten(
+            mix_buf(buf, state.sizes, eta, gamma, layout), layout)
+
+    def _metrics(params, loss, gamma):
+        metrics = {
+            "loss": loss,                                   # (K,)
+            "disagreement": consensus.disagreement(params),
+            "gamma": gamma,
+        }
+        if eval_fn is not None:
+            metrics["eval"] = jax.vmap(eval_fn)(params)
+        return metrics
+
+    def round_body(state: FedState, batches, eta, gamma):
+        """One full round given precomputed mixing weights. The consensus
+        exchange runs on the flat buffer (one fused (K,K)@(K,P) mix)."""
         if fed.algorithm == "dpsgd":
             # D-PSGD (Lian et al. 17): gossip-average every SGD step.
+            # The per-step gossip mixes LEAF-WISE: packing the pytree
+            # into the flat buffer every SGD step would triple the
+            # memory traffic of this hot loop (see the flat-vs-perleaf
+            # rows in BENCH_consensus.json); the flat engine is for the
+            # once-per-round exchange.
+            a = topology.consensus_matrix(eta, gamma)
+
+            def mix_leaf(leaf):
+                flat = leaf.reshape(leaf.shape[0], -1)
+                return (a.astype(flat.dtype) @ flat).reshape(leaf.shape)
+
             def step(carry, batch):
                 p, o = carry
-                a = topology.consensus_matrix(eta, gamma)
-                p = consensus.apply_matrix(p, a)
+                p = jax.tree.map(mix_leaf, p)
                 losses, grads = jax.vmap(
                     jax.value_and_grad(loss_fn))(p, batch)
                 p, o = jax.vmap(opt.update)(grads, o, p)
@@ -117,28 +188,97 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 step, (state.params, state.opt), bt)
             loss = losses.mean() * jnp.ones((fed.num_nodes,))
         else:
-            if fed.algorithm == "fedavg":
-                # centralized reference: server average, weights E_i/sum E
-                w = state.sizes / state.sizes.sum()
-                a = jnp.broadcast_to(w[None, :],
-                                     (fed.num_nodes, fed.num_nodes))
-                phi = consensus.apply_matrix(state.params, a)
-            elif fed.algorithm == "cdfa_m":
-                phi = consensus.partial_consensus_step(
-                    state.params, eta, gamma, fed.cdfa_fraction)
-            else:  # cdfl, cfa, metropolis — eq. (5)
-                phi = consensus.consensus_step(state.params, eta, gamma)
+            phi = mix_params(state, eta, gamma)
             params, opt_state, loss = local_updates(phi, state.opt, batches)
 
         new_state = FedState(params, opt_state, state.ratios, state.sizes,
                              state.round + 1)
-        metrics = {
-            "loss": loss,                                   # (K,)
-            "disagreement": consensus.disagreement(params),
-            "gamma": gamma,
-        }
-        if eval_fn is not None:
-            metrics["eval"] = jax.vmap(eval_fn)(params)
-        return new_state, metrics
+        return new_state, _metrics(params, loss, gamma)
 
-    return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn)
+    def _mixing(state: FedState):
+        eta = eta_fn(state)
+        gamma = jnp.minimum(
+            fed.gamma, 0.99 / jnp.maximum(topology.max_row_sum(eta), 1e-6))
+        return eta, gamma
+
+    def round_fn(state: FedState, batches):
+        eta, gamma = _mixing(state)
+        return round_body(state, batches, eta, gamma)
+
+    @partial(jax.jit, static_argnames=("num_rounds", "n_items"),
+             donate_argnums=(0,))
+    def _scan_rounds(state: FedState, data, rng: jax.Array,
+                     num_rounds: int, n_items: int):
+        # (R, K, S, B) minibatch indices for ALL rounds, sampled on device.
+        idx = jax.random.randint(
+            rng, (num_rounds, fed.num_nodes, fed.local_steps,
+                  train.batch_size), 0, n_items)
+        # ratios/sizes are fixed for the whole run, so the mixing weights
+        # are round-invariant: hoist them out of the scanned body.
+        eta, gamma = _mixing(state)
+
+        if fed.algorithm == "dpsgd":
+            def body(s, idx_r):
+                # gossip-per-step needs the whole round batch up front
+                batches = jax.tree.map(
+                    lambda arr: jax.vmap(lambda a, i: a[i])(arr, idx_r),
+                    data)
+                return round_body(s, batches, eta, gamma)
+            return jax.lax.scan(body, state, idx)
+
+        # The scan carries params as the FLAT (K, P) buffer: each round is
+        # mix (no pack needed) -> unpack once for the local steps -> pack
+        # once at the end, reused by both the disagreement metric and the
+        # next round's mix.
+        layout = flatten.make_layout(state.params)
+        buf0, _ = flatten.flatten(state.params, layout)
+
+        def body(carry, idx_r):
+            buf, opt_state, rnd = carry
+            phi = flatten.unflatten(
+                mix_buf(buf, state.sizes, eta, gamma, layout), layout)
+            params, opt_state, loss = local_updates_from_idx(
+                phi, opt_state, data, idx_r)
+            new_buf, _ = flatten.flatten(params, layout)
+            metrics = {
+                "loss": loss,
+                "disagreement": flatten.disagreement_flat(new_buf,
+                                                          layout.total),
+                "gamma": gamma,
+            }
+            if eval_fn is not None:
+                metrics["eval"] = jax.vmap(eval_fn)(params)
+            return (new_buf, opt_state, rnd + 1), metrics
+
+        (buf, opt_state, rnd), metrics = jax.lax.scan(
+            body, (buf0, state.opt, state.round), idx)
+        final = FedState(flatten.unflatten(buf, layout), opt_state,
+                         state.ratios, state.sizes, rnd)
+        return final, metrics
+
+    def run_rounds(state: FedState, data, num_rounds: int,
+                   rng: Optional[jax.Array] = None):
+        """Device-resident multi-round driver.
+
+        Runs ``num_rounds`` full C-DFL rounds (consensus + local steps)
+        under a single ``jax.lax.scan``: batch indices for every round
+        are pre-sampled with ``jax.random``, minibatches are gathered on
+        device from the resident datasets, and the state buffers are
+        donated — eliminating the per-round jit dispatch and host-numpy
+        batch transfer the Python round loop pays.
+
+        state: FedState (donated — do not reuse after the call).
+        data:  pytree of node-stacked dataset arrays, leaves (K, N, ...),
+               with the same keys ``loss_fn`` expects in a batch
+               (e.g. {"x": (K, N, 784), "y": (K, N)}).
+        Returns (final_state, metrics) with every metric stacked along a
+        leading (num_rounds,) axis.
+        """
+        if rng is None:
+            rng = jax.random.PRNGKey(train.seed + 1)
+        data = jax.tree.map(jnp.asarray, data)
+        n_items = jax.tree.leaves(data)[0].shape[1]
+        return _scan_rounds(state, data, rng, num_rounds, n_items)
+
+    return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
+                   run_rounds=run_rounds)

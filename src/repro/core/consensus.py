@@ -1,8 +1,11 @@
 """Consensus aggregation step (paper eq. 5), in two execution modes:
 
 * **simulation** — node-stacked pytrees (leading K dim) on any device count;
-  the consensus operator is a K×K matmul over the node axis. Used by the
-  paper reproduction, tests, and single-host training.
+  the pytree is packed into one flat (K, P) buffer (repro.core.flatten)
+  and the consensus operator is a SINGLE fused (K,K)@(K,P) mix — not one
+  einsum per leaf. Used by the paper reproduction, tests, and single-host
+  training. The seed per-leaf path survives as the correctness oracle in
+  ``repro.kernels.ref``.
 * **mesh** — inside ``shard_map`` over a named ``fed`` axis, neighbors are
   physical mesh neighbors and the exchange is ``jax.lax.ppermute`` — the
   paper's V2X ring mapped onto the TPU ICI/DCN ring.
@@ -15,59 +18,50 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import topology
+from repro.core import flatten, topology
 
 
 def apply_matrix(params, matrix: jax.Array):
-    """phi = A @ W over the leading node axis of every leaf.
+    """phi = A @ W over the leading node axis of every leaf, fused over
+    the whole pytree via the flat buffer.
 
     params: pytree with leaves shaped (K, ...); matrix: (K, K).
     """
-    def mix(leaf):
-        flat = leaf.reshape(leaf.shape[0], -1)
-        out = jnp.einsum("ki,id->kd", matrix.astype(flat.dtype), flat)
-        return out.reshape(leaf.shape)
-    return jax.tree.map(mix, params)
+    buf, layout = flatten.flatten(params)
+    return flatten.unflatten(flatten.apply_matrix_flat(buf, matrix), layout)
 
 
 def consensus_step(params, eta: jax.Array, gamma: float,
                    self_weight: float = 1.0):
-    """Paper eq. (5): phi_k = eta_kk*W_k + gamma * sum_i eta_ki (W_i - W_k).
+    """Paper eq. (5): phi_k = sw*W_k + gamma * sum_i eta_ki (W_i - W_k).
 
     eta: (K, K) neighbor mixing weights (zero diagonal / off-graph).
     With self_weight=1 this is the standard consensus update; gamma must be
-    in (0, 1/max_row_sum(eta)) (paper's bound) for stability.
+    in (0, 1/max_row_sum(eta)) (paper's bound) for stability. One fused
+    flat-buffer mix — see :func:`repro.core.flatten.mix_flat`.
     """
-    a = topology.consensus_matrix(eta, gamma)
-    if self_weight != 1.0:
-        k = eta.shape[0]
-        a = a + (self_weight - 1.0) * jnp.eye(k, dtype=a.dtype) \
-            * (1.0 - gamma * eta.sum(axis=1))[None, :].T
-    return apply_matrix(params, a)
+    buf, layout = flatten.flatten(params)
+    out = flatten.mix_flat(buf, eta, gamma, self_weight)
+    return flatten.unflatten(out, layout)
 
 
 def partial_consensus_step(params, eta, gamma, fraction: float):
     """C-DFA(M): consensus applied only to the first ``fraction`` of leaves
-    (paper Sec. 5.3 — federated optimization on Q <= N layers)."""
-    leaves, treedef = jax.tree.flatten(params)
-    n_mix = max(1, int(round(fraction * len(leaves))))
-    a = topology.consensus_matrix(eta, gamma)
-    mixed = [
-        apply_matrix(leaf, a) if i < n_mix else leaf
-        for i, leaf in enumerate(leaves)
-    ]
-    return jax.tree.unflatten(treedef, mixed)
+    (paper Sec. 5.3 — federated optimization on Q <= N layers). On the
+    flat buffer the leaf prefix is a contiguous column prefix, so this is
+    one fused mix over ``prefix`` columns."""
+    buf, layout = flatten.flatten(params)
+    prefix = flatten.prefix_length(layout, fraction)
+    out = flatten.partial_mix_flat(buf, eta, gamma, prefix)
+    return flatten.unflatten(out, layout)
 
 
 def disagreement(params) -> jax.Array:
     """Mean squared deviation of node params from the node-mean — the
-    consensus Lyapunov quantity (0 when all nodes agree)."""
-    def dev(leaf):
-        mu = leaf.mean(axis=0, keepdims=True)
-        return jnp.sum((leaf - mu) ** 2)
-    total = sum(jax.tree.leaves(jax.tree.map(dev, params)))
-    count = sum(l.size for l in jax.tree.leaves(params))
-    return total / count
+    consensus Lyapunov quantity (0 when all nodes agree). One pass over
+    the flat buffer."""
+    buf, layout = flatten.flatten(params)
+    return flatten.disagreement_flat(buf, layout.total)
 
 
 # --------------------------------------------------------------------------
@@ -117,10 +111,14 @@ def ring_sketch_exchange(ratio: jax.Array, axis: str | Sequence[str]):
 
 @partial(jax.jit, static_argnames=("gamma", "rounds"))
 def simulate_rounds(params, eta, gamma: float, rounds: int = 1):
-    """Pure consensus iteration (no gradients) — used by convergence tests."""
+    """Pure consensus iteration (no gradients) — used by convergence tests.
+    Packs once, scans the fused mix over the flat buffer, unpacks once."""
+    buf, layout = flatten.flatten(params)
     a = topology.consensus_matrix(eta, gamma)
 
-    def body(p, _):
-        return apply_matrix(p, a), disagreement(p)
+    def body(b, _):
+        return (flatten.apply_matrix_flat(b, a),
+                flatten.disagreement_flat(b, layout.total))
 
-    return jax.lax.scan(body, params, None, length=rounds)
+    buf, ds = jax.lax.scan(body, buf, None, length=rounds)
+    return flatten.unflatten(buf, layout), ds

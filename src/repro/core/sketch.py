@@ -85,14 +85,24 @@ def build_bitmaps(items: jax.Array, num_hashes: int = 3,
 
 
 def build_bitmaps_onehot(items: jax.Array, num_hashes: int = 3,
-                         m: int = 8192) -> jax.Array:
+                         m: int = 8192, block_items: int = 256) -> jax.Array:
     """Scatter-free bitmap build (the TPU-native formulation used by the
     Pallas kernel: TPUs have no scatter unit, so each bitmap position is a
-    compare + any-reduction over items). Identical output to build_bitmaps."""
+    compare + any-reduction over items). Identical output to build_bitmaps.
+
+    The reduction is chunked over ``block_items`` items at a time: the
+    dense compare tensor is (H, block, m) booleans, not (H, n, m) —
+    materializing the latter for the paper's m=8192 bitmaps over a few
+    thousand items costs ~100M booleans per hash function."""
     assert m % 32 == 0
     idx = hash_items(items, num_hashes, m)                # (H, n)
-    hit = (idx[..., None] == jnp.arange(m, dtype=jnp.int32))  # (H, n, m)
-    return _pack_bits(hit.any(axis=1))
+    n = idx.shape[1]
+    positions = jnp.arange(m, dtype=jnp.int32)
+    bits = jnp.zeros((num_hashes, m), jnp.bool_)
+    for start in range(0, n, block_items):
+        chunk = idx[:, start:start + block_items]         # (H, <=block)
+        bits = bits | (chunk[..., None] == positions).any(axis=1)
+    return _pack_bits(bits)
 
 
 def popcount(x: jax.Array) -> jax.Array:

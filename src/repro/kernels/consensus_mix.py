@@ -29,6 +29,45 @@ def _kernel(scal_ref, w_ref, nb_ref, out_ref, *, n_neighbors: int):
     out_ref[...] = (w + gamma * acc).astype(out_ref.dtype)
 
 
+def _flat_kernel(a_ref, buf_ref, out_ref):
+    # a_ref: (K, K) consensus operator; buf_ref: (K, block_cols) slice of
+    # the flat parameter buffer. One MXU matmul mixes every node at once.
+    a = a_ref[...].astype(jnp.float32)
+    buf = buf_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.dot(
+        a, buf, preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def flat_consensus(matrix: jax.Array, buf: jax.Array, *,
+                   block_cols: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """OUT = A @ BUF over the whole flat (K, P) parameter buffer.
+
+    ONE kernel launch replaces the seed's per-leaf dispatch (and its
+    per-leaf padding to 32K-element tiles): the grid tiles P, each step
+    streams a (K, block_cols) slab through VMEM once. A is any linear
+    consensus operator (eq. 5 matrix, FedAvg weights, ...).
+
+    matrix: (K, K); buf: (K, P) with P a multiple of ``block_cols``
+    (repro.core.flatten pads P to a 128-lane multiple once, at pack time).
+    """
+    k, p = buf.shape
+    assert matrix.shape == (k, k), (matrix.shape, k)
+    assert p % block_cols == 0, (p, block_cols)
+    grid = (p // block_cols,)
+    return pl.pallas_call(
+        _flat_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda c: (0, 0)),          # operator
+            pl.BlockSpec((k, block_cols), lambda c: (0, c)),  # buffer slab
+        ],
+        out_specs=pl.BlockSpec((k, block_cols), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((k, p), buf.dtype),
+        interpret=interpret,
+    )(matrix, buf)
+
+
 def consensus_mix(w: jax.Array, neighbors: jax.Array, eta: jax.Array,
                   gamma: jax.Array, *, block_rows: int = 256,
                   interpret: bool = False) -> jax.Array:

@@ -48,22 +48,36 @@ def consensus_mix(w, neighbors, eta, gamma, block_rows: int = 256):
                              block_rows=block_rows, interpret=_interpret())
 
 
-def consensus_mix_pytree(params, neighbor_params, eta, gamma):
-    """Apply the fused mix to every leaf of a param pytree.
+@jax.jit
+def flat_consensus(matrix, buf):
+    """A @ BUF over the flat (K, P) parameter buffer in one kernel launch
+    (P is already lane-padded by repro.core.flatten)."""
+    block_cols = 512 if buf.shape[1] % 512 == 0 else 128
+    return _cm.flat_consensus(matrix, buf, block_cols=block_cols,
+                              interpret=_interpret())
 
-    params: leaves (...); neighbor_params: leaves (N, ...). Leaves are
-    flattened and padded to (rows, 128) tiles for the kernel."""
-    def mix_leaf(w, nb):
-        shape = w.shape
-        n = nb.shape[0]
-        flat = w.reshape(-1)
-        pad = (-flat.size) % (256 * 128)
-        flat = jnp.pad(flat, (0, pad))
-        nbf = jnp.pad(nb.reshape(n, -1), ((0, 0), (0, pad)))
-        out = consensus_mix(flat.reshape(-1, 128),
-                            nbf.reshape(n, -1, 128), eta, gamma)
-        return out.reshape(-1)[:w.size].reshape(shape)
-    return jax.tree.map(mix_leaf, params, neighbor_params)
+
+def consensus_mix_pytree(params, neighbor_params, eta, gamma):
+    """Apply the fused mix to a whole param pytree at once.
+
+    params: leaves (...); neighbor_params: leaves (N, ...). The pytree is
+    packed into ONE flat (N+1, P) buffer (self in row 0) and mixed with a
+    single fused op — no per-leaf dispatch, no per-leaf tile padding (the
+    seed path padded every leaf to 32K-element tiles, catastrophic for
+    bias-sized leaves)."""
+    from repro.core import flatten
+
+    stacked = jax.tree.map(
+        lambda w, nb: jnp.concatenate(
+            [w[None], nb], dtype=jnp.promote_types(w.dtype, nb.dtype)),
+        params, neighbor_params)
+    buf, layout = flatten.flatten(stacked)
+    n = buf.shape[0] - 1
+    eta_full = jnp.zeros((n + 1, n + 1), jnp.float32)
+    eta_full = eta_full.at[0, 1:].set(eta.astype(jnp.float32))
+    out = flatten.mix_flat(buf, eta_full, gamma)
+    mixed = flatten.unflatten(out, layout)
+    return jax.tree.map(lambda m, w: m[0].astype(w.dtype), mixed, params)
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -18,6 +18,53 @@ def consensus_mix(w, neighbors, eta, gamma):
     return (w32 + jnp.asarray(gamma, jnp.float32) * acc).astype(w.dtype)
 
 
+# --- seed per-leaf consensus path (oracle for the flat-buffer engine) -------
+
+def apply_matrix_pytree(params, matrix):
+    """Leaf-at-a-time phi = A @ W: one einsum dispatch per leaf — the seed
+    implementation the flat engine (repro.core.flatten) replaced. Kept as
+    the ground truth the flat path is validated against."""
+    def mix(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        out = jnp.einsum("ki,id->kd", matrix.astype(flat.dtype), flat)
+        return out.reshape(leaf.shape)
+    return jax.tree.map(mix, params)
+
+
+def consensus_step_pytree(params, eta, gamma, self_weight: float = 1.0):
+    """Paper eq. (5) per leaf: phi_k = sw*W_k + g * sum_i eta_ki (W_i-W_k),
+    i.e. the operator A = sw*I + g*(eta - diag(rowsum))."""
+    from repro.core import topology
+    k = eta.shape[0]
+    a = topology.consensus_matrix(eta, gamma)
+    if self_weight != 1.0:
+        a = a + (self_weight - 1.0) * jnp.eye(k, dtype=a.dtype)
+    return apply_matrix_pytree(params, a)
+
+
+def partial_consensus_step_pytree(params, eta, gamma, fraction: float):
+    """Seed C-DFA(M): mix the first max(1, round(f * n_leaves)) leaves."""
+    from repro.core import topology
+    leaves, treedef = jax.tree.flatten(params)
+    n_mix = max(1, int(round(fraction * len(leaves))))
+    a = topology.consensus_matrix(eta, gamma)
+    mixed = [
+        apply_matrix_pytree(leaf, a) if i < n_mix else leaf
+        for i, leaf in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, mixed)
+
+
+def disagreement_pytree(params):
+    """Seed per-leaf mean squared deviation from the node-mean."""
+    def dev(leaf):
+        mu = leaf.mean(axis=0, keepdims=True)
+        return jnp.sum((leaf - mu) ** 2)
+    total = sum(jax.tree.leaves(jax.tree.map(dev, params)))
+    count = sum(l.size for l in jax.tree.leaves(params))
+    return total / count
+
+
 def cnd_bitmaps(items, num_hashes: int = 3, m: int = 8192):
     """Packed CND bitmaps — identical to the core sketch module."""
     return _sketch.build_bitmaps(items, num_hashes, m)

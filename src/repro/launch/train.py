@@ -4,6 +4,16 @@ Runs the C-DFL round loop (consensus + local Adam) for a selected
 architecture at a REDUCED size on synthetic token-LM data — the runnable
 counterpart of the dry-run (which exercises the full configs abstractly).
 
+Two drivers:
+  * ``--driver scan`` (default) — device-resident multi-round scan
+    (``Trainer.run_rounds``): datasets live on device, per-round batch
+    indices are pre-sampled with ``jax.random``, and all rounds run under
+    one ``jax.lax.scan`` with donated state. Metrics are printed after
+    the run from the stacked per-round arrays.
+  * ``--driver loop`` — the legacy per-round Python loop (host-numpy
+    batching + one jit dispatch per round); kept for debugging and as the
+    benchmark baseline.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
       --rounds 20 --nodes 4 [--algorithm cdfl] [--redundancy 0.5]
 """
@@ -24,6 +34,11 @@ from repro.data import pipeline, redundancy, synthetic
 from repro.models import transformer
 
 
+def _print_round(r, loss, disagree, dt):
+    print(f"round {r:3d} loss/node={np.round(loss, 3)} "
+          f"mean={loss.mean():.4f} disagree={disagree:.2e} ({dt:.1f}s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-1.7b")
@@ -37,6 +52,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--driver", choices=("scan", "loop"), default="scan",
+                    help="scan: single-dispatch device-resident rounds; "
+                         "loop: legacy per-round host loop")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -67,19 +85,34 @@ def main() -> None:
         lambda r: transformer.init_params(r, cfg),
         jnp.asarray(batcher_items.node_items()))
     print(f"arch={cfg.name} nodes={args.nodes} alg={args.algorithm} "
+          f"driver={args.driver} "
           f"CND ratios={np.round(np.asarray(state.ratios), 3)}")
 
-    for r in range(args.rounds):
+    if args.driver == "scan":
+        # token/label views of the resident per-node corpora: (K, N, T)
+        seqs = np.stack([d.x for d in nodes])
+        data = {"tokens": jnp.asarray(seqs[..., :-1]),
+                "labels": jnp.asarray(seqs[..., 1:])}
         t0 = time.time()
-        batch = pipeline.lm_batches(nodes, args.batch, args.local_steps,
-                                    seed=1000 + r)
-        batch = jax.tree.map(jnp.asarray, batch)
-        state, metrics = trainer.round(state, batch)
-        loss = np.asarray(metrics["loss"])
-        print(f"round {r:3d} loss/node={np.round(loss, 3)} "
-              f"mean={loss.mean():.4f} "
-              f"disagree={float(metrics['disagreement']):.2e} "
-              f"({time.time() - t0:.1f}s)")
+        state, metrics = trainer.run_rounds(state, data, args.rounds)
+        jax.block_until_ready(state.params)
+        total = time.time() - t0
+        losses = np.asarray(metrics["loss"])
+        disagrees = np.asarray(metrics["disagreement"])
+        per_round = total / max(args.rounds, 1)
+        for r in range(args.rounds):
+            _print_round(r, losses[r], float(disagrees[r]), per_round)
+        print(f"total {total:.1f}s ({per_round * 1e3:.1f} ms/round, "
+              f"single scan dispatch)")
+    else:
+        for r in range(args.rounds):
+            t0 = time.time()
+            batch = pipeline.lm_batches(nodes, args.batch, args.local_steps,
+                                        seed=1000 + r)
+            batch = jax.tree.map(jnp.asarray, batch)
+            state, metrics = trainer.round(state, batch)
+            _print_round(r, np.asarray(metrics["loss"]),
+                         float(metrics["disagreement"]), time.time() - t0)
 
     if args.checkpoint:
         save(args.checkpoint, state.params, step=args.rounds)

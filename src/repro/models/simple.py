@@ -75,8 +75,12 @@ def vgg_forward(params, x):
 # --- shared loss/accuracy -----------------------------------------------------
 
 def xent_loss(logits, labels):
+    # one-hot contraction, not take_along_axis: the gather's backward is a
+    # scatter, which XLA lowers poorly on CPU and TPU (no scatter unit);
+    # the one-hot form differentiates into dense ops.
     logp = jax.nn.log_softmax(logits, axis=-1)
-    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
+    return -(logp * onehot).sum(axis=-1).mean()
 
 
 def accuracy(logits, labels):

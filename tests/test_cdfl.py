@@ -95,3 +95,68 @@ def test_fedavg_reaches_exact_agreement():
     w = np.asarray(state.params["w"])
     # nodes then take local steps, so allow small divergence
     assert float(m["disagreement"]) < 0.2
+
+
+# --- device-resident multi-round scan driver --------------------------------
+
+def _mnist_trainer(alg="cdfl", local_steps=5, eval_fn=None):
+    nodes = [synthetic.synthetic_mnist(seed=i, n=160) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, local_steps)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg)
+    train = TrainConfig(learning_rate=1e-3)
+    tr = baselines.ALGORITHMS[alg](lambda p, b: loss(p, b), fed, train,
+                                   eval_fn=eval_fn)
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    jnp.asarray(batcher.node_items()))
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    return tr, state, data, nodes
+
+
+def test_run_rounds_trains_and_stacks_metrics():
+    tr, state, data, _ = _mnist_trainer()
+    final, m = tr.run_rounds(state, data, 12)
+    loss = np.asarray(m["loss"])
+    assert loss.shape == (12, 4)
+    assert np.isfinite(loss).all()
+    assert loss[-1].mean() < loss[0].mean()
+    assert int(final.round) == 12
+    assert np.asarray(m["disagreement"]).shape == (12,)
+    # Adam stepped local_steps times per round on every node
+    assert (np.asarray(final.opt.step) == 12 * 5).all()
+
+
+def test_run_rounds_deterministic_in_rng():
+    tr, state, data, _ = _mnist_trainer()
+    f1, m1 = tr.run_rounds(state, data, 4, rng=jax.random.PRNGKey(3))
+    tr2, state2, data2, _ = _mnist_trainer()
+    f2, m2 = tr2.run_rounds(state2, data2, 4, rng=jax.random.PRNGKey(3))
+    for a, b in zip(jax.tree.leaves(f1.params), jax.tree.leaves(f2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                  np.asarray(m2["loss"]))
+
+
+@pytest.mark.parametrize("alg", sorted(baselines.ALGORITHMS))
+def test_run_rounds_all_algorithms(alg):
+    tr, state, data, _ = _mnist_trainer(alg=alg, local_steps=2)
+    final, m = tr.run_rounds(state, data, 3)
+    assert np.isfinite(np.asarray(m["loss"])).all()
+    assert np.isfinite(
+        np.asarray(jax.tree.leaves(final.params)[0])).all()
+
+
+def test_run_rounds_with_eval_fn():
+    test = synthetic.synthetic_mnist(seed=99, n=200)
+
+    def eval_fn(p):
+        return simple.accuracy(
+            simple.mlp_forward(p, jnp.asarray(test.x)), jnp.asarray(test.y))
+
+    tr, state, data, _ = _mnist_trainer(eval_fn=eval_fn)
+    final, m = tr.run_rounds(state, data, 10)
+    accs = np.asarray(m["eval"])
+    assert accs.shape == (10, 4)
+    assert accs[-1].mean() > 0.9              # separable synthetic task

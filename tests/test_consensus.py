@@ -30,7 +30,30 @@ def test_eq5_matches_manual():
         for i in range(k):
             acc += e[kk, i] * (w[i] - w[kk])
         expect[kk] = w[kk] + gamma * acc
-    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-5)
+    # atol at the f32 noise floor: elements where the eq. 5 terms cancel
+    # to ~1e-3 carry ~1e-7 of accumulation-order noise, which a pure
+    # relative tolerance misreads as error.
+    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_eq5_self_weight_matches_manual():
+    """phi_k = sw*W_k + gamma * sum_i eta_ki (W_i - W_k) for sw != 1."""
+    k, sw, gamma = 4, 0.7, 0.3
+    params = _params(k, seed=5)
+    adj = jnp.asarray(topology.adjacency("ring", k))
+    eta = topology.uniform_mixing(adj)
+    out = consensus.consensus_step(params, eta, gamma, self_weight=sw)
+    w = np.asarray(params["w"])
+    e = np.asarray(eta)
+    expect = np.empty_like(w)
+    for kk in range(k):
+        acc = np.zeros_like(w[kk])
+        for i in range(k):
+            acc += e[kk, i] * (w[i] - w[kk])
+        expect[kk] = sw * w[kk] + gamma * acc
+    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-5,
+                               atol=1e-6)
 
 
 def test_consensus_preserves_mean_with_symmetric_weights():

@@ -1,0 +1,195 @@
+"""Flat parameter-buffer engine: pack/unpack round-trips on ragged
+pytrees and equivalence of the fused consensus path against the seed
+per-leaf reference (kernels.ref) across every paper algorithm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, flatten, topology
+from repro.kernels import ops, ref
+
+
+def _ragged_params(k=4, seed=0):
+    """Leaves with scalar-per-node, odd, and >2D shapes, mixed dtypes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return {
+        "w1": jax.random.normal(ks[0], (k, 7, 3)),
+        "gain": jax.random.normal(ks[1], (k,)),                 # per-node scalar
+        "w2": jax.random.normal(ks[2], (k, 1, 5, 2)).astype(jnp.bfloat16),
+        "b": jax.random.normal(ks[3], (k, 13)),
+        "deep": {"u": jax.random.normal(ks[4], (k, 2, 2, 2, 2))},
+    }
+
+
+def _mlp_like(k=4, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"w1": jax.random.normal(ks[0], (k, 784, 30)),
+            "b1": jax.random.normal(ks[1], (k, 30)),
+            "w2": jax.random.normal(ks[2], (k, 30, 10)),
+            "b2": jax.random.normal(ks[3], (k, 10))}
+
+
+# --- pack/unpack ------------------------------------------------------------
+
+def test_roundtrip_ragged_mixed_dtypes_bit_exact():
+    params = _ragged_params()
+    buf, layout = flatten.flatten(params)
+    back = flatten.unflatten(buf, layout)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert a.shape == b.shape
+        assert a.dtype == b.dtype
+        # f32 and bf16 survive the f32 buffer bit-exactly
+        assert (np.asarray(a, np.float32) == np.asarray(b, np.float32)).all()
+
+
+def test_buffer_is_lane_padded_f32():
+    params = _ragged_params()
+    buf, layout = flatten.flatten(params)
+    assert buf.dtype == jnp.float32
+    assert buf.shape == (4, layout.padded)
+    assert layout.padded % flatten.LANE == 0
+    assert layout.padded - layout.total < flatten.LANE
+    assert layout.total == sum(layout.sizes)
+    # tail padding is zero on every node
+    if layout.padded > layout.total:
+        assert (np.asarray(buf[:, layout.total:]) == 0).all()
+
+
+def test_layout_reuse_and_offsets_contiguous():
+    params = _ragged_params(seed=3)
+    layout = flatten.make_layout(params)
+    buf, layout2 = flatten.flatten(params, layout)
+    assert layout2 is layout
+    off = 0
+    for o, s in zip(layout.offsets, layout.sizes):
+        assert o == off
+        off += s
+
+
+def test_unflatten_one_matches_node_slice():
+    params = _ragged_params(seed=4)
+    buf, layout = flatten.flatten(params)
+    one = flatten.unflatten_one(buf[2], layout)
+    full = flatten.unflatten(buf, layout)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(full)):
+        assert (np.asarray(a, np.float32) == np.asarray(b[2],
+                                                        np.float32)).all()
+
+
+def test_make_layout_rejects_mismatched_node_dim():
+    with pytest.raises(ValueError):
+        flatten.make_layout({"a": jnp.zeros((4, 3)), "b": jnp.zeros((3, 2))})
+
+
+def test_prefix_length_covers_leaf_boundaries():
+    params = _mlp_like()
+    layout = flatten.make_layout(params)
+    n_leaves = len(layout.sizes)
+    assert flatten.prefix_length(layout, 1.0) == layout.total
+    # smallest fraction still mixes at least one leaf
+    p = flatten.prefix_length(layout, 1e-6)
+    assert p == layout.sizes[0]
+    # fraction 0.5 of 4 leaves -> first 2 leaves
+    assert flatten.prefix_length(layout, 0.5) == sum(layout.sizes[:2])
+    assert n_leaves == 4
+
+
+# --- equivalence vs the seed per-leaf reference -----------------------------
+
+def _eta_for(alg, adj, ratios, sizes):
+    if alg == "cdfl":
+        return topology.cnd_mixing(adj, ratios)
+    if alg in ("cfa", "fedavg"):
+        return topology.datasize_mixing(adj, sizes)
+    return topology.uniform_mixing(adj)       # cdfa_m, dpsgd
+
+
+ALGS = ["cdfl", "cfa", "fedavg", "cdfa_m", "dpsgd"]
+
+
+@pytest.mark.parametrize("alg", ALGS)
+def test_flat_consensus_step_matches_perleaf_reference(alg):
+    k = 4
+    params = _mlp_like(k)
+    adj = jnp.asarray(topology.adjacency("ring", k))
+    ratios = jnp.asarray([0.3, 0.8, 0.6, 0.9])
+    sizes = jnp.asarray([120.0, 160.0, 240.0, 320.0])
+    eta = _eta_for(alg, adj, ratios, sizes)
+    gamma = 0.4
+    out = consensus.consensus_step(params, eta, gamma)
+    exp = ref.consensus_step_pytree(params, eta, gamma)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("alg", ALGS)
+def test_flat_partial_consensus_matches_perleaf_reference(alg):
+    k = 4
+    params = _mlp_like(k, seed=2)
+    adj = jnp.asarray(topology.adjacency("ring", k))
+    eta = _eta_for(alg, adj, jnp.asarray([0.5, 0.7, 0.9, 1.0]),
+                   jnp.asarray([1.0, 2.0, 3.0, 4.0]))
+    for fraction in (0.25, 0.5, 1.0):
+        out = consensus.partial_consensus_step(params, eta, 0.3, fraction)
+        exp = ref.partial_consensus_step_pytree(params, eta, 0.3, fraction)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_flat_apply_matrix_matches_perleaf_reference():
+    k = 4
+    params = _ragged_params(seed=6)
+    # keep f32 only: the per-leaf reference mixes bf16 leaves in bf16
+    params["w2"] = params["w2"].astype(jnp.float32)
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (k, k)))
+    out = consensus.apply_matrix(params, a)
+    exp = ref.apply_matrix_pytree(params, a)
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_flat_disagreement_matches_perleaf_reference():
+    params = _mlp_like(seed=7)
+    d_flat = float(consensus.disagreement(params))
+    d_ref = float(ref.disagreement_pytree(params))
+    assert abs(d_flat - d_ref) <= 1e-5 * max(1.0, abs(d_ref))
+
+
+def test_mix_flat_kernel_path_matches_xla_path():
+    params = _mlp_like(seed=8)
+    buf, layout = flatten.flatten(params)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    xla = flatten.mix_flat(buf, eta, 0.4, use_kernel=False)
+    krn = flatten.mix_flat(buf, eta, 0.4, use_kernel=True)  # interpret mode
+    np.testing.assert_allclose(np.asarray(krn), np.asarray(xla), atol=1e-6)
+
+
+def test_partial_mix_kernel_path_handles_unaligned_prefix():
+    """The C-DFA(M) column prefix is rarely lane-aligned; the kernel
+    path must fall back to XLA instead of tripping the Pallas grid
+    assertion (regression: crashed on TPU for every cdfa_fraction)."""
+    params = _mlp_like(seed=10)
+    buf, layout = flatten.flatten(params)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    prefix = flatten.prefix_length(layout, 0.5)
+    assert prefix % flatten.LANE != 0          # the interesting case
+    out_k = flatten.partial_mix_flat(buf, eta, 0.4, prefix,
+                                     use_kernel=True)
+    out_x = flatten.partial_mix_flat(buf, eta, 0.4, prefix,
+                                     use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                               atol=1e-6)
+
+
+def test_flat_consensus_kernel_matches_einsum():
+    k, p = 4, 1024
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    buf = jax.random.normal(ks[0], (k, p))
+    a = jax.nn.softmax(jax.random.normal(ks[1], (k, k)))
+    out = ops.flat_consensus(a, buf)
+    exp = jnp.einsum("ki,ip->kp", a, buf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)

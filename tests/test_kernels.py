@@ -112,6 +112,23 @@ def test_consensus_mix_sweep(rows, n, dtype):
                                rtol=tol)
 
 
+@pytest.mark.parametrize("k,p,block,dtype", [
+    (4, 1024, 128, jnp.float32), (4, 2048, 512, jnp.float32),
+    (8, 512, 128, jnp.float32), (4, 1024, 128, jnp.bfloat16),
+])
+def test_flat_consensus_kernel_sweep(k, p, block, dtype):
+    from repro.kernels.consensus_mix import flat_consensus
+    ks = jax.random.split(jax.random.PRNGKey(k + p), 2)
+    buf = jax.random.normal(ks[0], (k, p)).astype(dtype)
+    a = jax.nn.softmax(jax.random.normal(ks[1], (k, k)))
+    out = flat_consensus(a.astype(dtype), buf, block_cols=block,
+                         interpret=True)
+    exp = jnp.einsum("ki,ip->kp", a, buf.astype(jnp.float32))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp), atol=tol, rtol=tol)
+
+
 def test_consensus_mix_pytree_wrapper():
     w = {"a": jnp.ones((33, 5)), "b": jnp.arange(100.0)}
     nb = {"a": jnp.zeros((3, 33, 5)),
