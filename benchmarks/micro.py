@@ -153,10 +153,13 @@ def bench_flat_consensus(quick: bool = False):
     for tag, shapes in cases:
         params = _stacked_pytree(shapes)
         n_el = sum(int(np.prod(s)) for s in shapes)
-        flat_fn = jax.jit(lambda p, e: consensus.consensus_step(p, e, 0.4))
+        flat_fn = jax.jit(
+            lambda p, e: consensus.consensus_step(p, e, 0.4, use_flat=True))
         leaf_fn = jax.jit(lambda p, e: ref.consensus_step_pytree(p, e, 0.4))
+        auto_fn = jax.jit(lambda p, e: consensus.consensus_step(p, e, 0.4))
         us_flat = _median_time(flat_fn, params, eta)
         us_leaf = _median_time(leaf_fn, params, eta)
+        us_auto = _median_time(auto_fn, params, eta)
         rows.append({"name": f"consensus_step_flat_{tag}",
                      "us_per_call": us_flat,
                      "derived": f"{n_el * 4 / us_flat:.0f} params/us"})
@@ -164,6 +167,46 @@ def bench_flat_consensus(quick: bool = False):
                      "us_per_call": us_leaf,
                      "derived": f"flat/perleaf speedup "
                                 f"{us_leaf / us_flat:.2f}x"})
+        picked = "flat" if consensus._prefer_flat(params) else "perleaf"
+        rows.append({"name": f"consensus_step_auto_{tag}",
+                     "us_per_call": us_auto,
+                     "derived": f"adaptive dispatch picked {picked}; "
+                                f"{min(us_flat, us_leaf) / us_auto:.2f}x "
+                                f"of best"})
+    return rows
+
+
+def bench_transports(quick: bool = False):
+    """One resident-buffer consensus exchange per transport backend
+    (repro.core.transport): dense f32/bf16, ring, gossip. The buffer is
+    already packed (as in run_rounds), so this isolates the exchange —
+    the bytes each backend would put on the wire are in `derived`."""
+    from repro.core import flatten, topology, transport
+    shapes = [(784, 256), (256,), (256, 256), (256,), (256, 10), (10,)]
+    params = _stacked_pytree(shapes, k=4)
+    buf, layout = flatten.flatten(params)
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.cnd_mixing(adj, jnp.asarray([0.3, 0.8, 0.6, 0.9]))
+    backends = [
+        ("transport_dense_f32", transport.DenseTransport()),
+        ("transport_dense_bf16", transport.DenseTransport(wire_dtype="bf16")),
+        ("transport_ring", transport.RingShardTransport()),
+        ("transport_gossip_s1", transport.GossipTransport(staleness=1)),
+    ]
+    rows = []
+    for name, t in backends:
+        state0 = t.init_state(buf)
+
+        @jax.jit
+        def fn(b, s, t=t):
+            out, s = t.exchange(b, eta, 0.4, s, jnp.int32(1))
+            return out, s
+
+        us = _median_time(lambda b, s: fn(b, s)[0], buf, state0)
+        kb = t.wire_bytes(layout) / 1e3
+        rows.append({"name": name, "us_per_call": us,
+                     "derived": f"{kb:.1f} KB/link/round; "
+                                f"{layout.total * 4 / us:.0f} params/us"})
     return rows
 
 
@@ -274,7 +317,8 @@ def bench_scan_rounds(quick: bool = False):
     # (init cost — CND sketching — stays outside the timed region).
     states = [tr.init(jax.random.PRNGKey(0),
                       lambda r: simple.mlp_init(r, MLP_CONFIG),
-                      jnp.asarray(batcher.node_items())) for _ in range(8)]
+                      jnp.asarray(batcher.node_items()))
+              for _ in range(1 + reps)]          # 1 warmup + reps timed
 
     def run_scan():
         s, _m = tr.run_rounds(states.pop(), data, rounds,

@@ -34,6 +34,7 @@ def main() -> None:
     for fn, kw in ((micro.bench_sketch, {}),
                    (micro.bench_consensus_mix, {}),
                    (micro.bench_flat_consensus, quick_kw),
+                   (micro.bench_transports, quick_kw),
                    (micro.bench_scan_consensus_rounds, quick_kw),
                    (micro.bench_rwkv_formulations, {}),
                    (micro.bench_consensus_round, {}),

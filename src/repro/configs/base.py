@@ -139,6 +139,10 @@ class FedConfig:
     # baseline selection: cdfl | cfa | cdfa_m | dpsgd | fedavg
     algorithm: str = "cdfl"
     cdfa_fraction: float = 1.0       # C-DFA(M): fraction of layers mixed
+    # --- consensus transport (repro.core.transport) --------------------------
+    transport: str = "dense"         # dense | ring | gossip
+    wire_dtype: str = "f32"          # f32 | bf16 exchanged-buffer format
+    staleness: int = 0               # gossip bounded delay (0 = synchronous)
 
 
 @dataclass(frozen=True)

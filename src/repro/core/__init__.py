@@ -1,3 +1,3 @@
 # The paper's primary contribution: CND sketch + consensus DFL.
 from repro.core import (baselines, cdfl, consensus, flatten,  # noqa: F401
-                        sketch, topology)
+                        sketch, topology, transport)

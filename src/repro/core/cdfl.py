@@ -19,17 +19,24 @@ Two drivers:
     hoisted out of the loop, and the full round loop run under ONE
     ``jax.lax.scan`` with donated state buffers — no per-round jit
     dispatch and no host-numpy batch transfer.
+
+How the exchange moves between nodes is pluggable: both drivers route
+the flat-buffer mix through a ``repro.core.transport`` Transport (dense
+fused matmul, ring-sharded neighbor shift, or bounded-delay gossip; f32
+or bf16 wire format), selected by ``FedConfig.transport`` or passed
+explicitly to :func:`make_trainer`.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core import consensus, flatten, sketch, topology
+from repro.core import transport as transport_lib
 from repro.optim import adam
 
 
@@ -39,6 +46,7 @@ class FedState(NamedTuple):
     ratios: jax.Array         # (K,) CND distinct ratios Ë_k
     sizes: jax.Array          # (K,) raw dataset sizes E_k
     round: jax.Array          # int32
+    tstate: Any = ()          # transport state (e.g. gossip snapshots)
 
 
 class Trainer(NamedTuple):
@@ -62,12 +70,35 @@ def _node_sketches(node_items, fed: FedConfig):
 
 
 def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
-                 eval_fn: Optional[Callable] = None) -> Trainer:
+                 eval_fn: Optional[Callable] = None,
+                 transport: Any = None) -> Trainer:
     """loss_fn(params, batch) -> scalar loss. batch leaves have no K dim
-    (the trainer vmaps over nodes)."""
+    (the trainer vmaps over nodes).
+
+    ``transport``: a ``repro.core.transport`` instance overriding the one
+    ``fed.transport``/``fed.wire_dtype``/``fed.staleness`` select.
+    fedavg (centralized server average) and dpsgd (per-step leaf-wise
+    gossip) bypass the transport; see ``mix_buf``/``round_body``.
+    """
     adj = jnp.asarray(topology.adjacency(fed.topology, fed.num_nodes))
     if fed.algorithm == "fedavg":
         adj = jnp.asarray(topology.adjacency("full", fed.num_nodes))
+    uses_transport = fed.algorithm not in ("fedavg", "dpsgd")
+    if transport is None:
+        if uses_transport:
+            transport = transport_lib.make_transport(fed)
+        else:
+            # these algorithms have no once-per-round buffer exchange to
+            # route; reject non-default transport config rather than
+            # silently running something else than what was asked for
+            cfg = (fed.transport, fed.wire_dtype, fed.staleness)
+            if cfg != ("dense", "f32", 0):
+                raise ValueError(
+                    f"{fed.algorithm} does not use the consensus "
+                    f"transport (fedavg: server average; dpsgd: per-step "
+                    f"leaf-wise gossip) — got transport={fed.transport}/"
+                    f"{fed.wire_dtype}/staleness={fed.staleness}")
+            transport = transport_lib.DenseTransport()
     opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
                train.weight_decay, train.grad_clip)
     # Partially unrolling the local-step scan lets XLA build larger fusion
@@ -96,8 +127,18 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             params = jax.vmap(init_params_fn)(jax.random.split(rng, k))
         opt_state = jax.vmap(opt.init)(params)
         ratios, sizes = _node_sketches(node_items, fed)
+        tstate = ()
+        # pack the model for init_state only when the transport actually
+        # keeps state (e.g. gossip snapshots); unknown custom transports
+        # default to stateful
+        if uses_transport and getattr(transport, "stateful", True):
+            buf, layout = flatten.flatten(params)
+            if fed.algorithm == "cdfa_m":
+                prefix = flatten.prefix_length(layout, fed.cdfa_fraction)
+                buf = buf[:, :prefix]
+            tstate = transport.init_state(buf)
         return FedState(params, opt_state, ratios, sizes,
-                        jnp.zeros((), jnp.int32))
+                        jnp.zeros((), jnp.int32), tstate)
 
     def local_updates(params, opt_state, batches):
         """vmap over nodes of a scan over local steps.
@@ -129,26 +170,31 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             return p, o, losses.mean()
         return jax.vmap(one_node)(params, opt_state, data, idx)
 
-    def mix_buf(buf, sizes, eta, gamma, layout):
-        """The round's consensus exchange on the flat (K, P) buffer — one
-        fused (K,K)@(K,P) operation for every algorithm."""
+    def mix_buf(buf, sizes, eta, gamma, layout, tstate, rnd):
+        """The round's consensus exchange on the flat (K, P) buffer,
+        routed through the selected transport. Returns (buf, tstate)."""
         if fed.algorithm == "fedavg":
-            # centralized reference: server average, weights E_i/sum E
+            # centralized reference: server average, weights E_i/sum E —
+            # not a decentralized exchange, so no transport
             w = sizes / sizes.sum()
             a = jnp.broadcast_to(w[None, :],
                                  (fed.num_nodes, fed.num_nodes))
-            return flatten.apply_matrix_flat(buf, a)
+            return flatten.apply_matrix_flat(buf, a), tstate
         if fed.algorithm == "cdfa_m":
+            # C-DFA(M): only the leaf-prefix columns travel the wire
             prefix = flatten.prefix_length(layout, fed.cdfa_fraction)
-            return flatten.partial_mix_flat(buf, eta, gamma, prefix)
+            head, tstate = transport.exchange(buf[:, :prefix], eta, gamma,
+                                              tstate, rnd)
+            return jnp.concatenate([head, buf[:, prefix:]], axis=1), tstate
         # cdfl, cfa, metropolis — eq. (5)
-        return flatten.mix_flat(buf, eta, gamma)
+        return transport.exchange(buf, eta, gamma, tstate, rnd)
 
     def mix_params(state: FedState, eta, gamma):
         """Pytree wrapper over :func:`mix_buf` (one pack/unpack)."""
         buf, layout = flatten.flatten(state.params)
-        return flatten.unflatten(
-            mix_buf(buf, state.sizes, eta, gamma, layout), layout)
+        out, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
+                              state.tstate, state.round)
+        return flatten.unflatten(out, layout), tstate
 
     def _metrics(params, loss, gamma):
         metrics = {
@@ -187,12 +233,13 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             (params, opt_state), losses = jax.lax.scan(
                 step, (state.params, state.opt), bt)
             loss = losses.mean() * jnp.ones((fed.num_nodes,))
+            tstate = state.tstate
         else:
-            phi = mix_params(state, eta, gamma)
+            phi, tstate = mix_params(state, eta, gamma)
             params, opt_state, loss = local_updates(phi, state.opt, batches)
 
         new_state = FedState(params, opt_state, state.ratios, state.sizes,
-                             state.round + 1)
+                             state.round + 1, tstate)
         return new_state, _metrics(params, loss, gamma)
 
     def _mixing(state: FedState):
@@ -205,14 +252,22 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
 
-    @partial(jax.jit, static_argnames=("num_rounds", "n_items"),
+    @partial(jax.jit, static_argnames=("num_rounds", "max_items"),
              donate_argnums=(0,))
     def _scan_rounds(state: FedState, data, rng: jax.Array,
-                     num_rounds: int, n_items: int):
+                     num_rounds: int, max_items: int, node_sizes):
         # (R, K, S, B) minibatch indices for ALL rounds, sampled on device.
-        idx = jax.random.randint(
-            rng, (num_rounds, fed.num_nodes, fed.local_steps,
-                  train.batch_size), 0, n_items)
+        shape = (num_rounds, fed.num_nodes, fed.local_steps,
+                 train.batch_size)
+        if node_sizes is None:
+            idx = jax.random.randint(rng, shape, 0, max_items)
+        else:
+            # ragged per-node datasets (padded to a common N): uniform
+            # over each node's true item count
+            u = jax.random.uniform(rng, shape)
+            idx = jnp.minimum(
+                (u * node_sizes[None, :, None, None]).astype(jnp.int32),
+                node_sizes.astype(jnp.int32)[None, :, None, None] - 1)
         # ratios/sizes are fixed for the whole run, so the mixing weights
         # are round-invariant: hoist them out of the scanned body.
         eta, gamma = _mixing(state)
@@ -229,14 +284,16 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         # The scan carries params as the FLAT (K, P) buffer: each round is
         # mix (no pack needed) -> unpack once for the local steps -> pack
         # once at the end, reused by both the disagreement metric and the
-        # next round's mix.
+        # next round's mix. The transport state (e.g. gossip snapshots)
+        # rides the same carry.
         layout = flatten.make_layout(state.params)
         buf0, _ = flatten.flatten(state.params, layout)
 
         def body(carry, idx_r):
-            buf, opt_state, rnd = carry
-            phi = flatten.unflatten(
-                mix_buf(buf, state.sizes, eta, gamma, layout), layout)
+            buf, opt_state, rnd, tstate = carry
+            mixed, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
+                                    tstate, rnd)
+            phi = flatten.unflatten(mixed, layout)
             params, opt_state, loss = local_updates_from_idx(
                 phi, opt_state, data, idx_r)
             new_buf, _ = flatten.flatten(params, layout)
@@ -248,16 +305,17 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             }
             if eval_fn is not None:
                 metrics["eval"] = jax.vmap(eval_fn)(params)
-            return (new_buf, opt_state, rnd + 1), metrics
+            return (new_buf, opt_state, rnd + 1, tstate), metrics
 
-        (buf, opt_state, rnd), metrics = jax.lax.scan(
-            body, (buf0, state.opt, state.round), idx)
+        (buf, opt_state, rnd, tstate), metrics = jax.lax.scan(
+            body, (buf0, state.opt, state.round, state.tstate), idx)
         final = FedState(flatten.unflatten(buf, layout), opt_state,
-                         state.ratios, state.sizes, rnd)
+                         state.ratios, state.sizes, rnd, tstate)
         return final, metrics
 
     def run_rounds(state: FedState, data, num_rounds: int,
-                   rng: Optional[jax.Array] = None):
+                   rng: Optional[jax.Array] = None,
+                   n_items: Optional[jax.Array] = None):
         """Device-resident multi-round driver.
 
         Runs ``num_rounds`` full C-DFL rounds (consensus + local steps)
@@ -271,14 +329,21 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         data:  pytree of node-stacked dataset arrays, leaves (K, N, ...),
                with the same keys ``loss_fn`` expects in a batch
                (e.g. {"x": (K, N, 784), "y": (K, N)}).
+        n_items: optional (K,) per-node valid item counts when the
+               resident arrays are padded to a common N (ragged nodes,
+               e.g. after CND dedup); sampling stays uniform over each
+               node's true count.
         Returns (final_state, metrics) with every metric stacked along a
         leading (num_rounds,) axis.
         """
         if rng is None:
             rng = jax.random.PRNGKey(train.seed + 1)
         data = jax.tree.map(jnp.asarray, data)
-        n_items = jax.tree.leaves(data)[0].shape[1]
-        return _scan_rounds(state, data, rng, num_rounds, n_items)
+        max_items = jax.tree.leaves(data)[0].shape[1]
+        if n_items is not None:
+            n_items = jnp.asarray(n_items)
+        return _scan_rounds(state, data, rng, num_rounds, max_items,
+                            n_items)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
                    run_rounds=run_rounds)

@@ -31,15 +31,65 @@ def apply_matrix(params, matrix: jax.Array):
     return flatten.unflatten(flatten.apply_matrix_flat(buf, matrix), layout)
 
 
+# One-shot dispatch cost model (CPU): the flat path pays ~2 extra full
+# passes over the packed buffer (pack + unpack); the per-leaf path pays a
+# fixed dispatch overhead per leaf. Per-leaf wins on multi-MB
+# cache-resident trees (see consensus_step_perleaf_xf74leaf in
+# BENCH_consensus.json); flat wins when leaves are many and small, or
+# when the buffer is already resident (run_rounds mixes the flat buffer
+# directly and never sees this heuristic).
+_PERLEAF_DISPATCH_US = 3.0
+_COPY_BYTES_PER_US = 5e3            # ~5 GB/s effective pack+unpack rate
+
+
+def _prefer_flat(params) -> bool:
+    # accelerators always want the single fused mix (per-leaf dispatch /
+    # kernel-launch overhead dominates there); the cost model below is
+    # CPU-specific
+    if jax.default_backend() != "cpu":
+        return True
+    leaves = jax.tree.leaves(params)
+    pack_bytes = 4 * sum(l.size for l in leaves)       # f32 buffer traffic
+    return (len(leaves) * _PERLEAF_DISPATCH_US
+            > 2 * pack_bytes / _COPY_BYTES_PER_US)
+
+
+def _consensus_step_perleaf(params, eta, gamma, self_weight):
+    """Eq. (5) leaf-at-a-time: ONE matmul per leaf with the operator
+    precomposed once (A = sw*I + g*(eta - diag(rowsum))) — the single
+    full pass over each leaf this dispatch path exists to preserve.
+    Both forms sit at the f32 noise floor (~1e-7 vs f64) for any gamma
+    in the paper's stability range."""
+    a = topology.consensus_matrix(eta, gamma)
+    if self_weight != 1.0:
+        k = eta.shape[0]
+        a = a + (self_weight - 1.0) * jnp.eye(k, dtype=a.dtype)
+
+    def mix(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        return (a.astype(flat.dtype) @ flat).reshape(leaf.shape)
+
+    return jax.tree.map(mix, params)
+
+
 def consensus_step(params, eta: jax.Array, gamma: float,
-                   self_weight: float = 1.0):
+                   self_weight: float = 1.0,
+                   use_flat: bool | None = None):
     """Paper eq. (5): phi_k = sw*W_k + gamma * sum_i eta_ki (W_i - W_k).
 
     eta: (K, K) neighbor mixing weights (zero diagonal / off-graph).
     With self_weight=1 this is the standard consensus update; gamma must be
-    in (0, 1/max_row_sum(eta)) (paper's bound) for stability. One fused
-    flat-buffer mix — see :func:`repro.core.flatten.mix_flat`.
+    in (0, 1/max_row_sum(eta)) (paper's bound) for stability.
+
+    ``use_flat=None`` dispatches adaptively: the fused flat-buffer mix
+    (:func:`repro.core.flatten.mix_flat`) on TPU or small many-leaf
+    trees, per-leaf einsums on large cache-resident CPU trees where
+    pack+unpack traffic dominates.
     """
+    if use_flat is None:
+        use_flat = _prefer_flat(params)
+    if not use_flat:
+        return _consensus_step_perleaf(params, eta, gamma, self_weight)
     buf, layout = flatten.flatten(params)
     out = flatten.mix_flat(buf, eta, gamma, self_weight)
     return flatten.unflatten(out, layout)
@@ -68,37 +118,49 @@ def disagreement(params) -> jax.Array:
 # Mesh mode: ring consensus via ppermute inside shard_map.
 # --------------------------------------------------------------------------
 
-def ring_neighbors(x: jax.Array, axis: str | Sequence[str]):
+def ring_neighbors(x: jax.Array, axis: str | Sequence[str], perms=None):
     """Return (prev, next) copies of x from the ring neighbors along the
-    named mesh axis/axes (paper's N̄_k = {k-1, k+1} V2X exchange)."""
+    named mesh axis/axes (paper's N̄_k = {k-1, k+1} V2X exchange).
+
+    ``perms``: optional precomputed (fwd, bwd) (src, dst) pair lists
+    (see :func:`repro.launch.mesh.fed_ring_perms`); derived from the
+    axis sizes when omitted."""
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    size = 1
-    for a in axes:
-        size *= jax.lax.axis_size(a)
-    fwd = [(i, (i + 1) % size) for i in range(size)]
-    bwd = [(i, (i - 1) % size) for i in range(size)]
+    if perms is None:
+        size = int(jax.lax.psum(1, axes))   # static: psum of a literal
+        fwd = [(i, (i + 1) % size) for i in range(size)]
+        bwd = [(i, (i - 1) % size) for i in range(size)]
+    else:
+        fwd, bwd = perms
     nxt = jax.lax.ppermute(x, axes, fwd)    # from k-1 (shifted forward)
     prv = jax.lax.ppermute(x, axes, bwd)    # from k+1
     return nxt, prv
 
 
 def ring_consensus_shard(params, eta_prev: jax.Array, eta_next: jax.Array,
-                         gamma: float, axis: str | Sequence[str]):
+                         gamma: float, axis: str | Sequence[str], *,
+                         wire_dtype: str = "f32", shards: int = 1,
+                         perms=None):
     """Eq. (5) on a physical ring: every fed shard holds ONE node's params
     (no leading K dim here — we are inside shard_map).
 
     eta_prev/eta_next: per-node scalars (this node's weights for its two
     ring neighbors, from the CND sketch exchange).
-    Two ppermutes per round; each transfers the full param pytree — this is
-    the collective the §Roofline 'collective term' measures.
+
+    The pytree is packed ONCE into a lane-padded flat ``(P,)`` vector
+    (repro.core.flatten) and the whole exchange is one ``ppermute`` per
+    direction per round — the seed path issued one per leaf. The
+    transfer rides :func:`repro.core.transport.ring_exchange_shard`, so
+    it inherits the bf16 wire option and the column-sharded
+    transfer/mix overlap.
     """
-    def mix(w):
-        w_prev, w_next = ring_neighbors(w, axis)
-        g = jnp.asarray(gamma, w.dtype)
-        ep = eta_prev.astype(w.dtype)
-        en = eta_next.astype(w.dtype)
-        return w + g * (ep * (w_prev - w) + en * (w_next - w))
-    return jax.tree.map(mix, params)
+    from repro.core import transport as _transport
+
+    vec, layout = flatten.flatten_one(params)
+    out = _transport.ring_exchange_shard(
+        vec, eta_prev, eta_next, gamma, axis,
+        wire_dtype=wire_dtype, shards=shards, perms=perms)
+    return flatten.unflatten_one(out, layout)
 
 
 def ring_sketch_exchange(ratio: jax.Array, axis: str | Sequence[str]):

@@ -108,6 +108,25 @@ def unflatten(buf: jax.Array, layout: FlatLayout, cast: bool = True):
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+def make_layout_one(params) -> FlatLayout:
+    """Layout of a SINGLE node's pytree (no leading K dim).
+
+    Shapes record the full leaf shapes and ``num_nodes`` is 1; pack with
+    :func:`flatten_one`, unpack with :func:`unflatten_one`. This is the
+    mesh-mode layout: inside ``shard_map`` each fed shard holds ONE
+    node's params, and the ring exchange moves the single ``(P,)``
+    vector — one collective, not one per leaf.
+    """
+    return make_layout(jax.tree.map(lambda l: l[None], params))
+
+
+def flatten_one(params, layout: FlatLayout | None = None):
+    """Pack a single-node pytree into a lane-padded ``(P,)`` f32 vector
+    (tail padding zero). Inverse: :func:`unflatten_one`."""
+    buf, layout = flatten(jax.tree.map(lambda l: l[None], params), layout)
+    return buf[0], layout
+
+
 def unflatten_one(vec: jax.Array, layout: FlatLayout, cast: bool = True):
     """Single-node unpack: (P,) -> pytree with the trailing shapes (no K
     dim). Used inside per-node vmapped compute (loss/grad on one node's
@@ -163,7 +182,8 @@ def apply_matrix_flat(buf: jax.Array, matrix: jax.Array,
 
 def mix_flat(buf: jax.Array, eta: jax.Array, gamma,
              self_weight: float = 1.0,
-             use_kernel: bool | None = None) -> jax.Array:
+             use_kernel: bool | None = None,
+             wire: jax.Array | None = None) -> jax.Array:
     """Paper eq. (5) on the flat buffer, one fused operation:
 
         phi_k = sw * W_k + gamma * sum_i eta_ki (W_i - W_k)
@@ -172,18 +192,30 @@ def mix_flat(buf: jax.Array, eta: jax.Array, gamma,
     cancellation error at the f32 noise floor — the precomposed-matrix
     form ``A @ W`` loses ~1 decimal digit when ``gamma * row_sum`` is
     close to 1.
+
+    ``wire`` is the buffer as it traveled the network (defaults to
+    ``buf``): pass a bf16 cast to halve exchanged bytes, or a stale
+    gossip snapshot for bounded-delay rounds. Only the difference terms
+    see the wire precision — they vanish at consensus — while ``buf``
+    stays the f32 master copy.
     """
     eta32 = eta.astype(buf.dtype)
     g = jnp.asarray(gamma, buf.dtype)
-    row = eta32.sum(axis=1)
+    w = buf if wire is None else wire
     if _use_kernel(use_kernel, buf.shape[1]):
-        # same delta-form expression tree as the XLA branch below — only
-        # the eta@buf matmul itself goes through the Pallas kernel, so
-        # both paths share the cancellation-safe numerics.
-        mixed = apply_matrix_flat(buf, eta32, use_kernel=use_kernel)
-    else:
-        mixed = jnp.einsum("ki,ip->kp", eta32, buf)
-    out = g * (mixed - row[:, None] * buf)
+        # the whole delta form (matmul + row-sum rescale + master add)
+        # fuses into ONE Pallas pass; the wire slab is read at its wire
+        # dtype and upcast in VMEM, so a bf16 wire halves neighbor-read
+        # bytes too.
+        from repro.kernels import ops
+        out = ops.flat_mix(eta32, buf, w, g)
+        if self_weight == 1.0:
+            return out
+        return out + jnp.asarray(self_weight - 1.0, buf.dtype) * buf
+    row = eta32.sum(axis=1)
+    w32 = w.astype(buf.dtype)
+    mixed = jnp.einsum("ki,ip->kp", eta32, w32)
+    out = g * (mixed - row[:, None] * w32)
     if self_weight == 1.0:
         return buf + out
     return jnp.asarray(self_weight, buf.dtype) * buf + out
@@ -195,6 +227,17 @@ def partial_mix_flat(buf: jax.Array, eta: jax.Array, gamma, prefix: int,
     federated optimization on Q <= N layers)."""
     head = mix_flat(buf[:, :prefix], eta, gamma, use_kernel=use_kernel)
     return jnp.concatenate([head, buf[:, prefix:]], axis=1)
+
+
+def column_shards(padded: int, shards: int) -> int:
+    """Largest shard count <= ``shards`` that splits a ``padded``-wide
+    buffer into equal LANE-aligned column chunks. The ring transport
+    ppermutes chunk j+1 while mixing chunk j; unshardable widths fall
+    back to 1 (one transfer, no overlap)."""
+    shards = max(int(shards), 1)
+    while shards > 1 and (padded % shards or (padded // shards) % LANE):
+        shards -= 1
+    return shards
 
 
 def disagreement_flat(buf: jax.Array, total: int) -> jax.Array:

@@ -1,0 +1,234 @@
+"""Pluggable consensus transport layer — how the flat buffer moves.
+
+The paper's eq. 5 exchange is the only part of C-DFL that touches the
+network. Everything upstream (CND weights, local Adam, the scan driver)
+is transport-agnostic once params live in the flat ``(K, P)`` buffer
+(repro.core.flatten), so the three comms-scaling directions — bf16 wire
+format, ring-sharded collectives, bounded-delay async gossip — are all
+implementations of ONE protocol:
+
+    state        = transport.init_state(buf)
+    buf', state' = transport.exchange(buf, eta, gamma, state, rnd)
+
+* :class:`DenseTransport` — the fused ``(K,K)@(K,P)`` mix (XLA einsum or
+  the Pallas ``flat_mix`` kernel on TPU). ``wire_dtype="bf16"`` casts
+  the exchanged buffer to bf16 (halves consensus bytes) while ``buf``
+  stays the f32 master copy; delta-form mixing means the wire precision
+  only touches the neighbor *differences*, which vanish at consensus.
+* :class:`RingShardTransport` — neighbor exchange restricted to the ring
+  ``{k-1, k+1}``: two shifted copies of the wire buffer instead of a
+  dense matmul. In simulation (node-stacked buffer) the shift is
+  ``jnp.roll`` on the K axis; under ``shard_map`` over the fed mesh axes
+  it is ONE ``lax.ppermute`` per direction per round on the flat vector
+  (see :func:`ring_exchange_shard`) — the seed path issued one per leaf.
+* :class:`GossipTransport` — bounded-delay (stale-neighbor) exchange:
+  neighbors read a snapshot of the buffer ``staleness`` rounds old,
+  kept in a circular double buffer inside the transport state.
+  ``staleness=0`` bypasses the state and reproduces synchronous C-DFL
+  bit-exactly (mobility/async-DFL comparisons, arXiv:2503.06443).
+
+Transports are frozen dataclasses (hashable, jit-static); their state is
+a pytree that rides the trainer's scan carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+
+WIRE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def _wire_dtype(name: str):
+    try:
+        return WIRE_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire dtype {name!r} (choose from "
+            f"{sorted(WIRE_DTYPES)})") from None
+
+
+class _FlatTransport:
+    """Shared transport behavior: one full wire-dtype buffer per link
+    per round, and no state unless a subclass says otherwise."""
+
+    wire_dtype: str = "f32"
+
+    @property
+    def stateful(self) -> bool:
+        """False skips the init-time buffer pack init_state would need."""
+        return False
+
+    def init_state(self, buf: jax.Array) -> Any:
+        return ()
+
+    def wire_bytes(self, layout: flatten.FlatLayout) -> int:
+        """Bytes one node sends over one link per round."""
+        return layout.padded * _wire_dtype(self.wire_dtype).dtype.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTransport(_FlatTransport):
+    """Fused dense exchange: every node mixes every neighbor in one
+    ``(K,K)@(K,P)`` operation (the eta matrix encodes the topology)."""
+
+    wire_dtype: str = "f32"
+    use_kernel: bool | None = None      # None -> auto (TPU)
+
+    def exchange(self, buf, eta, gamma, state=(), rnd=None):
+        wire = None
+        if self.wire_dtype != "f32":
+            wire = buf.astype(_wire_dtype(self.wire_dtype))
+        out = flatten.mix_flat(buf, eta, gamma, use_kernel=self.use_kernel,
+                               wire=wire)
+        return out, state
+
+
+@dataclasses.dataclass(frozen=True)
+class RingShardTransport(_FlatTransport):
+    """Eq. 5 on the ring ``{k-1, k+1}`` — two shifted wire buffers, no
+    dense matmul. Requires K >= 3 (on K=2 both shifts alias the single
+    neighbor and its weight would be double-counted).
+
+    ``shards`` is the column-shard count for the mesh path: the flat
+    vector is ppermuted in ``shards`` chunks so the mix of chunk j
+    overlaps the transfer of chunk j+1 (XLA async collective-permute).
+    Simulation mode has no transfer to hide and ignores it.
+    """
+
+    wire_dtype: str = "f32"
+    shards: int = 1
+
+    def exchange(self, buf, eta, gamma, state=(), rnd=None):
+        k = buf.shape[0]
+        if k < 3:
+            raise ValueError(f"ring transport needs K >= 3 nodes, got {k}")
+        idx = jnp.arange(k)
+        eta32 = eta.astype(buf.dtype)
+        ep = eta32[idx, (idx - 1) % k][:, None]     # weight for k-1
+        en = eta32[idx, (idx + 1) % k][:, None]     # weight for k+1
+        wire = buf.astype(_wire_dtype(self.wire_dtype))
+        w_self = wire.astype(buf.dtype)
+        w_prev = jnp.roll(wire, 1, axis=0).astype(buf.dtype)    # from k-1
+        w_next = jnp.roll(wire, -1, axis=0).astype(buf.dtype)   # from k+1
+        g = jnp.asarray(gamma, buf.dtype)
+        out = buf + g * (ep * (w_prev - w_self) + en * (w_next - w_self))
+        return out, state
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipTransport(_FlatTransport):
+    """Bounded-delay gossip: neighbor terms read a buffer snapshot
+    ``staleness`` rounds old (a circular buffer of snapshots in the
+    transport state, stored at wire precision). ``staleness=0`` is
+    stateless and bit-identical to :class:`DenseTransport`."""
+
+    staleness: int = 0
+    wire_dtype: str = "f32"
+
+    @property
+    def stateful(self) -> bool:
+        return self.staleness > 0
+
+    def init_state(self, buf: jax.Array) -> Any:
+        if self.staleness == 0:
+            return ()
+        snap = buf.astype(_wire_dtype(self.wire_dtype))
+        return jnp.broadcast_to(
+            snap[None], (self.staleness,) + snap.shape).copy()
+
+    def exchange(self, buf, eta, gamma, state=(), rnd=None):
+        dt = _wire_dtype(self.wire_dtype)
+        if self.staleness == 0:
+            wire = None if self.wire_dtype == "f32" else buf.astype(dt)
+            return flatten.mix_flat(buf, eta, gamma, wire=wire), state
+        if rnd is None:
+            raise ValueError("stale gossip needs the round index (rnd)")
+        # slot r % s was last written at round r - s: exactly s rounds old
+        slot = jnp.mod(jnp.asarray(rnd, jnp.int32), self.staleness)
+        stale = jax.lax.dynamic_index_in_dim(state, slot, 0,
+                                             keepdims=False)
+        new_state = jax.lax.dynamic_update_index_in_dim(
+            state, buf.astype(dt)[None], slot, 0)
+        eta32 = eta.astype(buf.dtype)
+        row = eta32.sum(axis=1)
+        g = jnp.asarray(gamma, buf.dtype)
+        # neighbor terms from the stale snapshot, self term from the
+        # CURRENT buffer at wire precision (so staleness->0 recovers the
+        # synchronous delta form term by term)
+        mixed = jnp.einsum("ki,ip->kp", eta32, stale.astype(buf.dtype))
+        w_self = buf.astype(dt).astype(buf.dtype)
+        out = buf + g * (mixed - row[:, None] * w_self)
+        return out, new_state
+
+
+TRANSPORTS = ("dense", "ring", "gossip")
+
+
+def make_transport(fed) -> Any:
+    """Build the transport a :class:`repro.configs.base.FedConfig` asks
+    for (``fed.transport`` / ``fed.wire_dtype`` / ``fed.staleness``)."""
+    kind = getattr(fed, "transport", "dense")
+    wire = getattr(fed, "wire_dtype", "f32")
+    _wire_dtype(wire)                             # validate early
+    if kind == "dense":
+        return DenseTransport(wire_dtype=wire)
+    if kind == "ring":
+        if fed.num_nodes < 3:
+            raise ValueError("ring transport needs num_nodes >= 3")
+        if fed.topology != "ring":
+            raise ValueError(
+                f"ring transport moves data only between ring neighbors; "
+                f"topology={fed.topology!r} needs the dense transport")
+        return RingShardTransport(wire_dtype=wire)
+    if kind == "gossip":
+        return GossipTransport(staleness=getattr(fed, "staleness", 0),
+                               wire_dtype=wire)
+    raise ValueError(
+        f"unknown transport {kind!r} (choose from {TRANSPORTS})")
+
+
+# --------------------------------------------------------------------------
+# Mesh mode: the ring transport inside shard_map (one node per fed shard).
+# --------------------------------------------------------------------------
+
+def ring_exchange_shard(vec: jax.Array, eta_prev: jax.Array,
+                        eta_next: jax.Array, gamma,
+                        axis: str | Sequence[str], *,
+                        wire_dtype: str = "f32", shards: int = 1,
+                        perms=None) -> jax.Array:
+    """Eq. 5 on the physical ring for ONE node's flat ``(P,)`` vector
+    (inside ``shard_map`` over the fed mesh axes).
+
+    The vector is split into LANE-aligned column chunks and every chunk
+    is ppermuted in both directions up front — XLA lowers these to async
+    collective-permute pairs, so the Pallas/VPU mix of chunk j overlaps
+    the transfer of chunk j+1. ``shards=1`` degenerates to ONE ppermute
+    per direction per round (vs. one per pytree leaf in the seed path).
+
+    ``perms``: optional precomputed (fwd, bwd) (src, dst) pairs from
+    :func:`repro.launch.mesh.fed_ring_perms`; derived from the axis
+    sizes when omitted.
+    """
+    from repro.core.consensus import ring_neighbors
+
+    wire = vec.astype(_wire_dtype(wire_dtype))
+    n = flatten.column_shards(wire.shape[-1], shards)
+    chunks = jnp.split(wire, n, axis=-1) if n > 1 else [wire]
+    # issue every transfer before any mix so they can all be in flight
+    moved = [ring_neighbors(c, axis, perms=perms) for c in chunks]
+    g = jnp.asarray(gamma, vec.dtype)
+    ep = eta_prev.astype(vec.dtype)
+    en = eta_next.astype(vec.dtype)
+    outs = []
+    for c, (w_prev, w_next) in zip(jnp.split(vec, n, axis=-1)
+                                   if n > 1 else [vec], moved):
+        w_self = (c.astype(_wire_dtype(wire_dtype))
+                  .astype(vec.dtype))
+        outs.append(c + g * (ep * (w_prev.astype(vec.dtype) - w_self)
+                             + en * (w_next.astype(vec.dtype) - w_self)))
+    return outs[0] if n == 1 else jnp.concatenate(outs, axis=-1)

@@ -38,6 +38,57 @@ def _flat_kernel(a_ref, buf_ref, out_ref):
         a, buf, preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
+def _flat_mix_kernel(scal_ref, eta_ref, master_ref, wire_ref, out_ref):
+    # scal_ref: (1, 1) gamma. eta_ref: (K, K) neighbor weights.
+    # master_ref: (K, block_cols) f32 master slab; wire_ref: the slab as it
+    # traveled the wire (f32 or bf16). Delta form in one VMEM pass:
+    #     out = master + gamma * (eta @ wire - rowsum(eta) * wire)
+    # so a bf16 wire perturbs only the *difference* terms (which vanish at
+    # consensus), never the f32 master copy.
+    eta = eta_ref[...].astype(jnp.float32)
+    w = wire_ref[...].astype(jnp.float32)
+    m = master_ref[...].astype(jnp.float32)
+    g = scal_ref[0, 0]
+    row = eta.sum(axis=1)[:, None]
+    mixed = jnp.dot(eta, w, preferred_element_type=jnp.float32)
+    out_ref[...] = (m + g * (mixed - row * w)).astype(out_ref.dtype)
+
+
+def flat_mix(eta: jax.Array, master: jax.Array, wire: jax.Array,
+             gamma: jax.Array, *, block_cols: int = 512,
+             interpret: bool = False) -> jax.Array:
+    """Fused paper-eq.5 delta mix over the flat (K, P) buffer:
+
+        OUT = MASTER + gamma * (ETA @ WIRE - rowsum(ETA) * WIRE)
+
+    One kernel launch streams the master slab and the wire slab through
+    VMEM once — the matmul, row-sum rescale, and master add that were
+    previously separate XLA ops all fuse here. ``wire`` is the exchanged
+    representation of the buffer (``master`` itself, a bf16 cast of it,
+    or a stale gossip snapshot); a bf16 wire halves the neighbor-read
+    bytes while the accumulation stays f32.
+    """
+    k, p = master.shape
+    assert eta.shape == (k, k), (eta.shape, k)
+    assert wire.shape == (k, p), (wire.shape, master.shape)
+    assert p % block_cols == 0, (p, block_cols)
+    scal = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (p // block_cols,)
+    return pl.pallas_call(
+        _flat_mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda c: (0, 0)),           # gamma
+            pl.BlockSpec((k, k), lambda c: (0, 0)),           # eta
+            pl.BlockSpec((k, block_cols), lambda c: (0, c)),  # master slab
+            pl.BlockSpec((k, block_cols), lambda c: (0, c)),  # wire slab
+        ],
+        out_specs=pl.BlockSpec((k, block_cols), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((k, p), master.dtype),
+        interpret=interpret,
+    )(scal, eta, master, wire)
+
+
 def flat_consensus(matrix: jax.Array, buf: jax.Array, *,
                    block_cols: int = 512,
                    interpret: bool = False) -> jax.Array:

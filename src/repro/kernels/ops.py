@@ -57,6 +57,17 @@ def flat_consensus(matrix, buf):
                               interpret=_interpret())
 
 
+@jax.jit
+def flat_mix(eta, master, wire, gamma):
+    """Fused eq.5 delta mix on the flat buffer (one kernel launch):
+    OUT = MASTER + gamma * (ETA @ WIRE - rowsum(ETA) * WIRE). ``wire`` is
+    the exchanged representation (master, a bf16 cast, or a stale gossip
+    snapshot); accumulation is always f32."""
+    block_cols = 512 if master.shape[1] % 512 == 0 else 128
+    return _cm.flat_mix(eta, master, wire, gamma, block_cols=block_cols,
+                        interpret=_interpret())
+
+
 def consensus_mix_pytree(params, neighbor_params, eta, gamma):
     """Apply the fused mix to a whole param pytree at once.
 

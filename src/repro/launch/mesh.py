@@ -66,6 +66,18 @@ def fed_axes(mesh: Mesh) -> tuple:
     return ("pod", "fed") if "pod" in mesh.axis_names else ("fed",)
 
 
+def fed_ring_perms(mesh: Mesh) -> tuple[list, list]:
+    """Forward/backward (src, dst) pairs for the consensus ring over the
+    fed axes product — precomputed host-side once per mesh so shard_map
+    bodies (consensus.ring_neighbors / transport.ring_exchange_shard)
+    don't rebuild them on every call. The ring wraps across pods on the
+    multi-pod mesh, crossing the DCN exactly twice per round."""
+    n = fed_size(mesh)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    return fwd, bwd
+
+
 def dp_size(mesh: Mesh) -> int:
     return mesh.shape["dp"]
 

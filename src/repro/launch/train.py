@@ -30,6 +30,7 @@ from repro.checkpointing import save
 from repro.configs.base import FedConfig, TrainConfig
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.core import baselines
+from repro.core import transport as transport_lib
 from repro.data import pipeline, redundancy, synthetic
 from repro.models import transformer
 
@@ -55,12 +56,24 @@ def main() -> None:
     ap.add_argument("--driver", choices=("scan", "loop"), default="scan",
                     help="scan: single-dispatch device-resident rounds; "
                          "loop: legacy per-round host loop")
+    ap.add_argument("--transport", choices=transport_lib.TRANSPORTS,
+                    default="dense",
+                    help="how the consensus exchange moves the flat "
+                         "buffer: dense fused matmul, ring neighbor "
+                         "shift, or bounded-delay gossip")
+    ap.add_argument("--wire-dtype", choices=sorted(transport_lib.WIRE_DTYPES),
+                    default="f32",
+                    help="exchanged-buffer format; bf16 halves consensus "
+                         "bytes (f32 master copy is kept)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="gossip bounded delay in rounds (0 = synchronous)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
     cfg = get_smoke_arch(args.arch)
     fed = FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
-                    algorithm=args.algorithm)
+                    algorithm=args.algorithm, transport=args.transport,
+                    wire_dtype=args.wire_dtype, staleness=args.staleness)
     train = TrainConfig(learning_rate=args.lr, batch_size=args.batch)
 
     # per-node synthetic corpora with injected duplicates (the paper's
@@ -85,7 +98,9 @@ def main() -> None:
         lambda r: transformer.init_params(r, cfg),
         jnp.asarray(batcher_items.node_items()))
     print(f"arch={cfg.name} nodes={args.nodes} alg={args.algorithm} "
-          f"driver={args.driver} "
+          f"driver={args.driver} transport={args.transport}"
+          f"/{args.wire_dtype}"
+          f"{f'/stale{args.staleness}' if args.staleness else ''} "
           f"CND ratios={np.round(np.asarray(state.ratios), 3)}")
 
     if args.driver == "scan":

@@ -117,7 +117,9 @@ def test_flat_consensus_step_matches_perleaf_reference(alg):
     sizes = jnp.asarray([120.0, 160.0, 240.0, 320.0])
     eta = _eta_for(alg, adj, ratios, sizes)
     gamma = 0.4
-    out = consensus.consensus_step(params, eta, gamma)
+    # use_flat=True: keep this a FLAT-engine check even on CPU, where the
+    # adaptive dispatch would route a tree this size per-leaf
+    out = consensus.consensus_step(params, eta, gamma, use_flat=True)
     exp = ref.consensus_step_pytree(params, eta, gamma)
     for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
