@@ -1,0 +1,86 @@
+"""Validate the BENCH row schema of a ``benchmarks.run --json`` file.
+
+The perf trajectory (ROADMAP "Perf trajectory") is judged against
+``BENCH_consensus.json``; a silent schema change (renamed key, string
+where a number was, a row family dropped by a refactor) would break that
+comparison without failing any test. CI runs the quick micro suite and
+then this checker so schema breakage is caught pre-merge.
+
+  PYTHONPATH=src python -m benchmarks.check_schema bench_smoke.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_KEYS = {"name": str, "us_per_call": (int, float), "derived": str}
+
+# one representative per row family run.py must keep emitting; matched
+# as a prefix so parameterized names (round counts) may vary
+REQUIRED_FAMILIES = (
+    "cnd_sketch_",
+    "consensus_mix_",
+    "consensus_step_",
+    "transport_",
+    "consensus_",           # scanned consensus rounds
+    "cdfl_",                # end-to-end round + scan rows
+    "mobility_",            # eta-resample + churned-scan rows
+    "rwkv6_",
+)
+
+
+def check(path: str) -> list[str]:
+    errors = []
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot load {path}: {e}"]
+    if not isinstance(rows, list) or not rows:
+        return [f"{path}: expected a non-empty JSON list of rows"]
+    names = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"row {i}: not an object")
+            continue
+        for key, typ in REQUIRED_KEYS.items():
+            if key not in row:
+                errors.append(f"row {i} ({row.get('name', '?')}): "
+                              f"missing key {key!r}")
+            elif not isinstance(row[key], typ):
+                errors.append(f"row {i} ({row.get('name', '?')}): "
+                              f"{key}={row[key]!r} is not {typ}")
+        extra = set(row) - set(REQUIRED_KEYS)
+        if extra:
+            errors.append(f"row {i} ({row.get('name', '?')}): "
+                          f"unexpected keys {sorted(extra)}")
+        if isinstance(row.get("us_per_call"), (int, float)) \
+                and not row["us_per_call"] > 0:
+            errors.append(f"row {i} ({row.get('name', '?')}): "
+                          f"us_per_call={row['us_per_call']} not positive")
+        if isinstance(row.get("name"), str):
+            names.append(row["name"])
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        errors.append(f"duplicate row names: {dupes}")
+    for fam in REQUIRED_FAMILIES:
+        if not any(n.startswith(fam) for n in names):
+            errors.append(f"no row in family {fam!r}*")
+    return errors
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_consensus.json"
+    errors = check(path)
+    if errors:
+        print(f"BENCH schema check FAILED for {path}:")
+        for e in errors:
+            print(f"  - {e}")
+        raise SystemExit(1)
+    with open(path) as f:
+        n = len(json.load(f))
+    print(f"BENCH schema ok: {n} rows in {path}")
+
+
+if __name__ == "__main__":
+    main()

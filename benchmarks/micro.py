@@ -351,3 +351,68 @@ def bench_scan_rounds(quick: bool = False):
                     f"scan is {us_loop / us_scan:.2f}x faster than "
                     f"seed loop"},
     ]
+
+
+def bench_mobility(quick: bool = False):
+    """Mobility subsystem cost: (1) building the per-round (R, K, K) eta
+    stack from a kinematic trace (the host-side price of re-sampling the
+    topology every round), and (2) the full C-DFL scan driven by a
+    churned platoon stack vs the static ring — the device-side price of
+    per-round mixing weights riding the scan instead of a hoisted
+    constant."""
+    from repro import mobility
+    from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines
+    from repro.data import pipeline, synthetic
+    from repro.models import simple
+
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 5
+    mob = MobilityConfig(kind="platoon", speed=20.0, speed_jitter=0.15,
+                         radio_range=250.0, dt=2.0, seed=0)
+    ratios = jnp.asarray([0.1, 0.2, 0.4, 0.8])
+
+    def build_stack():
+        etas, gammas = mobility.scenario_stacks(
+            mob, 60, 4, rule="cnd", gamma_cap=0.5, ratios=ratios)
+        return jax.block_until_ready(etas)
+
+    us_stack = _median_time(build_stack, reps=reps)
+    rows = [{"name": "mobility_eta_stack_60r", "us_per_call": us_stack,
+             "derived": f"{us_stack / 60:.1f} us/round resample "
+                        f"(trace+links+mixing, K=4)"}]
+
+    nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 10)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    times = {}
+    for tag, mob_cfg in (("static", None), ("churned", mob)):
+        tr = baselines.cdfl(lambda p, b: loss(p, b),
+                            FedConfig(num_nodes=4, local_steps=10,
+                                      mobility=mob_cfg),
+                            TrainConfig(learning_rate=1e-3))
+        states = [tr.init(jax.random.PRNGKey(0),
+                          lambda r: simple.mlp_init(r, MLP_CONFIG),
+                          jnp.asarray(batcher.node_items()))
+                  for _ in range(1 + reps)]       # run_rounds donates
+
+        def run():
+            s, _ = tr.run_rounds(states.pop(), data, rounds,
+                                 rng=jax.random.PRNGKey(7))
+            return jax.tree.leaves(s.params)[0]
+
+        times[tag] = _median_time(run, reps=reps, warmup=1)
+    rows.append({"name": f"mobility_scan_static_{rounds}r",
+                 "us_per_call": times["static"],
+                 "derived": f"{times['static'] / rounds:.0f} us/round "
+                            f"(constant eta stack)"})
+    rows.append({"name": f"mobility_scan_churned_{rounds}r",
+                 "us_per_call": times["churned"],
+                 "derived": f"{times['churned'] / rounds:.0f} us/round; "
+                            f"churn overhead "
+                            f"{times['churned'] / times['static']:.2f}x "
+                            f"vs static"})
+    return rows

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FedConfig, TrainConfig
+from repro import mobility
+from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
 from repro.configs.paper_models import MLP_CONFIG, VGG_CONFIG
 from repro.core import baselines
 from repro.data import pipeline, redundancy, synthetic
@@ -55,7 +56,8 @@ def _pad_cycle(a: np.ndarray, n: int) -> np.ndarray:
 
 
 def _run_to_target(model: str, alg: str, target: float = 0.8,
-                   max_rounds: int = 60, noise_scale: float = 1.0):
+                   max_rounds: int = 60, noise_scale: float = 1.0,
+                   mob: MobilityConfig | None = None):
     """Returns (rounds_to_target_per_node, final_acc_per_node, curve).
 
     All ``max_rounds`` rounds run device-resident under ONE
@@ -96,7 +98,8 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
     def eval_fn(p):
         return simple.accuracy(fwd(p, xt), yt)
 
-    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg)
+    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg,
+                    mobility=mob)
     train = TrainConfig(learning_rate=lr, batch_size=cfgm.batch_size,
                         beta1=cfgm.beta1, beta2=cfgm.beta2, eps=cfgm.eps)
     tr = baselines.ALGORITHMS[alg](lambda p, b: loss(p, b), fed, train,
@@ -146,6 +149,65 @@ def tables_1_to_4(model: str, max_rounds: int = 60):
                 "wall_s": round(time.time() - t0, 1),
             })
     return rows, curves
+
+
+# Mobility scenario sweep: static-ring baseline vs increasing topology
+# churn (same data, same algorithms — only WHEN links exist changes).
+# Scenarios are deterministic (seeded traces); churn_rate is reported
+# from repro.mobility.handover_stats on the actual adjacency stack.
+MOBILITY_SCENARIOS = {
+    "static_ring": None,
+    # platoon holds together early (training-critical rounds) and
+    # splits as the speed spread pulls vehicles out of range
+    "platoon": MobilityConfig(kind="platoon", speed=20.0,
+                              speed_jitter=0.15, radio_range=250.0,
+                              dt=2.0, seed=0),
+    # wider speed spread: splits early and hard (sparse-highway limit)
+    "platoon_split": MobilityConfig(kind="platoon", speed=20.0,
+                                    speed_jitter=0.3, radio_range=250.0,
+                                    dt=2.0, seed=0),
+    # urban grid: links flip at intersections but components re-merge
+    "manhattan": MobilityConfig(kind="manhattan", speed=10.0,
+                                radio_range=500.0, area=800.0,
+                                dt=2.0, seed=0),
+}
+
+
+def mobility_sweep(model: str = "mlp", max_rounds: int = 60,
+                   algs=("cdfl", "cfa"), target: float = 0.8):
+    """Accuracy / rounds-to-target vs topology churn rate.
+
+    One row per (scenario, algorithm): the static-ring rows reproduce
+    the paper's Tables 1-4 ranking (C-DFL beats CFA under redundancy);
+    the churned rows show how much of that gap mobility erodes.
+    """
+    rows = []
+    for scen, mob in MOBILITY_SCENARIOS.items():
+        if mob is None:
+            churn, stats = 0.0, None
+        else:
+            stats = mobility.handover_stats(
+                mobility.adjacency_stack(mob, max_rounds, 4))
+            churn = stats["churn_rate"]
+        for alg in algs:
+            t0 = time.time()
+            reached, accs, _ = _run_to_target(model, alg, target=target,
+                                              max_rounds=max_rounds,
+                                              mob=mob)
+            rr = [int(r) if r > 0 else max_rounds for r in reached]
+            rows.append({
+                "table": f"mobility_{model}",
+                "scenario": scen,
+                "algorithm": ALG_LABEL[alg],
+                "churn_rate": round(float(churn), 3),
+                "partitioned_rounds": 0 if stats is None
+                else stats["partitioned_rounds"],
+                "rounds_to_80": rr,
+                "mean_rounds_to_80": round(float(np.mean(rr)), 1),
+                "final_acc": round(float(np.mean(accs)), 3),
+                "wall_s": round(time.time() - t0, 1),
+            })
+    return rows
 
 
 def cnd_accuracy_table():

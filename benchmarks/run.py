@@ -38,7 +38,8 @@ def main() -> None:
                    (micro.bench_scan_consensus_rounds, quick_kw),
                    (micro.bench_rwkv_formulations, {}),
                    (micro.bench_consensus_round, {}),
-                   (micro.bench_scan_rounds, quick_kw)):
+                   (micro.bench_scan_rounds, quick_kw),
+                   (micro.bench_mobility, quick_kw)):
         for row in fn(**kw):
             json_rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},"
@@ -72,6 +73,11 @@ def main() -> None:
     for alg, curve in curves.items():
         pts = ";".join(f"{r}:{l:.3f}:{a:.3f}" for r, l, a in curve[::3])
         print(f"curve_mlp,{alg},{pts}")
+
+    print("\n# Mobility scenario sweep (MLP): accuracy / rounds-to-80% "
+          "vs topology churn (static ring baseline first)")
+    for row in paper_tables.mobility_sweep("mlp", max_rounds=max_rounds):
+        print(row)
 
     if not args.skip_vgg:
         vgg_rounds = 10 if args.quick else 40

@@ -1,0 +1,57 @@
+"""Highway-platoon mobility: C-DFL over a graph that changes every round.
+
+Eight vehicles leave as one platoon; per-vehicle speed spread pulls the
+fast group away until the radio links across the gap drop and the
+platoon SPLITS into two components that train independently — then the
+mixing stacks show them re-normalizing per component with no NaNs and
+no server. Compare the same run on the frozen ring the paper used.
+
+  PYTHONPATH=src python examples/mobility_platoon.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import mobility
+from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
+from repro.configs.paper_models import MLP_CONFIG
+from repro.core import baselines
+from repro.data import pipeline, synthetic
+from repro.models import simple
+
+K, ROUNDS = 8, 20
+
+# 1. the scenario: 8 vehicles, 25 m/s +-40%, 300 m radio range
+mob = MobilityConfig(kind="platoon", speed=25.0, speed_jitter=0.4,
+                     radio_range=300.0, dt=5.0, seed=3,
+                     link_quality="quadratic")
+adj = mobility.adjacency_stack(mob, ROUNDS, K)
+stats = mobility.handover_stats(adj)
+print(f"platoon trace: {stats['links_per_round']:.1f} links/round, "
+      f"churn {stats['churn_rate']:.3f}, {stats['handovers']} handovers, "
+      f"{stats['partitioned_rounds']}/{ROUNDS} rounds partitioned")
+comps = [mobility.num_components(adj[t]) for t in range(ROUNDS)]
+print("components per round:", comps)
+
+# 2. per-vehicle datasets + C-DFL trainer with the mobility config
+nodes = [synthetic.synthetic_mnist(seed=i, n=256, noise=2.0)
+         for i in range(K)]
+trainer = baselines.cdfl(
+    (lambda loss: lambda p, b: loss(p, b))(simple.make_mlp_loss(MLP_CONFIG)),
+    FedConfig(num_nodes=K, gamma=0.5, local_steps=5, mobility=mob),
+    TrainConfig(learning_rate=1e-3, batch_size=32))
+state = trainer.init(
+    jax.random.PRNGKey(0), lambda r: simple.mlp_init(r, MLP_CONFIG),
+    jnp.asarray(pipeline.FederatedBatcher(nodes, 32, 5).node_items()))
+
+# 3. all rounds under one scan — round r consumes eta stack slice r
+data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+        "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+state, m = trainer.run_rounds(state, data, ROUNDS)
+loss = np.asarray(m["loss"])
+dis = np.asarray(m["disagreement"])
+for r in range(0, ROUNDS, 4):
+    print(f"round {r:2d}  comps={comps[r]}  loss={loss[r].mean():.3f}  "
+          f"disagree={dis[r]:.2e}")
+print(f"final: loss={loss[-1].mean():.3f} (finite={np.isfinite(loss).all()})"
+      f" — split halves kept training, consensus only within range")

@@ -123,6 +123,28 @@ INPUT_SHAPES = {
 
 
 @dataclass(frozen=True)
+class MobilityConfig:
+    """Vehicular mobility scenario: per-round radio-range topologies.
+
+    A mobility scenario replaces the single static graph with a
+    deterministic kinematic trace over ``num_nodes`` vehicles; every
+    federated round re-derives the communication graph from pairwise
+    distances (``repro.mobility``). ``kind="static"`` disables mobility
+    (identical to ``FedConfig(mobility=None)``).
+    """
+
+    kind: str = "static"         # static | platoon | manhattan | waypoint
+    radio_range: float = 250.0   # V2V radio range (m)
+    speed: float = 20.0          # mean vehicle speed (m/s)
+    speed_jitter: float = 0.3    # fractional per-vehicle speed spread
+    area: float = 1000.0         # simulation square side / road length (m)
+    dt: float = 1.0              # simulated seconds between rounds
+    seed: int = 0                # trace RNG seed (deterministic)
+    link_quality: str = "binary"  # binary | quadratic distance weighting
+    min_quality: float = 0.05    # weighted links below this are dropped
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """C-DFL hyperparameters (paper Alg. 2 / eqs. 5-8)."""
 
@@ -143,6 +165,11 @@ class FedConfig:
     transport: str = "dense"         # dense | ring | gossip
     wire_dtype: str = "f32"          # f32 | bf16 exchanged-buffer format
     staleness: int = 0               # gossip bounded delay (0 = synchronous)
+    # --- vehicular mobility (repro.mobility) ---------------------------------
+    # None (or kind="static"): one frozen graph, mixing hoisted out of the
+    # round scan. Otherwise per-round radio-range topologies drive a
+    # time-varying (R, K, K) eta stack through Trainer.run_rounds.
+    mobility: Optional[MobilityConfig] = None
 
 
 @dataclass(frozen=True)

@@ -25,6 +25,15 @@ the flat-buffer mix through a ``repro.core.transport`` Transport (dense
 fused matmul, ring-sharded neighbor shift, or bounded-delay gossip; f32
 or bf16 wire format), selected by ``FedConfig.transport`` or passed
 explicitly to :func:`make_trainer`.
+
+WHAT graph the exchange runs on may change every round: the scan driver
+consumes a precomputed ``(R, K, K)`` eta stack and ``(R,)`` gamma stack
+as per-round scan inputs (``repro.mobility`` derives them from vehicle
+kinematics when ``FedConfig.mobility`` is set; the static case
+broadcasts the one hoisted graph, numerically identical to scanning a
+round-invariant constant). All three transports consume the per-round
+slice — gossip's stale snapshots mix with the CURRENT round's weights,
+so a link that dropped since the snapshot was taken contributes nothing.
 """
 from __future__ import annotations
 
@@ -54,6 +63,10 @@ class Trainer(NamedTuple):
     round: Callable           # (state, batches) -> (state, metrics)
     eta_fn: Callable          # state -> (K, K) mixing weights
     run_rounds: Callable      # (state, data, num_rounds[, rng]) -> (state, metrics)
+    # (state, num_rounds) -> ((R, K, K) eta, (R,) gamma): the per-round
+    # mixing stacks the scan driver consumes (mobility-derived when
+    # FedConfig.mobility is set, broadcast static weights otherwise)
+    mixing_stack: Callable = None
 
 
 def _node_sketches(node_items, fed: FedConfig):
@@ -84,6 +97,17 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
     if fed.algorithm == "fedavg":
         adj = jnp.asarray(topology.adjacency("full", fed.num_nodes))
     uses_transport = fed.algorithm not in ("fedavg", "dpsgd")
+    try:
+        mix_rule = topology.ALGORITHM_MIXING[fed.algorithm]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {fed.algorithm!r}") from None
+    mobile = fed.mobility is not None and fed.mobility.kind != "static"
+    if mobile and fed.algorithm == "fedavg":
+        # fedavg is the centralized reference: a server average has no
+        # inter-vehicle links to churn
+        raise ValueError("fedavg (centralized server average) does not "
+                         "model a vehicular topology; mobility requires "
+                         "a decentralized algorithm")
     if transport is None:
         if uses_transport:
             transport = transport_lib.make_transport(fed)
@@ -106,15 +130,9 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
     local_unroll = max(1, min(2, fed.local_steps))
 
     def eta_fn(state: FedState) -> jax.Array:
-        if fed.algorithm == "cdfl":
-            return topology.cnd_mixing(adj, state.ratios)        # eq. 6
-        if fed.algorithm in ("cfa", "fedavg"):
-            return topology.datasize_mixing(adj, state.sizes)
-        if fed.algorithm in ("cdfa_m", "dpsgd"):
-            return topology.uniform_mixing(adj)
-        if fed.algorithm == "metropolis":
-            return topology.metropolis_mixing(adj)
-        raise ValueError(f"unknown algorithm {fed.algorithm!r}")
+        return topology.mixing_weights(adj, mix_rule,
+                                       ratios=state.ratios,
+                                       sizes=state.sizes)
 
     def init(rng: jax.Array, init_params_fn: Callable,
              node_items: jax.Array, same_init: bool = True) -> FedState:
@@ -244,18 +262,40 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
 
     def _mixing(state: FedState):
         eta = eta_fn(state)
-        gamma = jnp.minimum(
-            fed.gamma, 0.99 / jnp.maximum(topology.max_row_sum(eta), 1e-6))
-        return eta, gamma
+        return eta, topology.stable_gamma(eta, fed.gamma)
 
     def round_fn(state: FedState, batches):
+        if mobile:
+            raise ValueError(
+                "FedConfig.mobility is set but Trainer.round trains on "
+                "the frozen static graph — time-varying topologies ride "
+                "the run_rounds scan")
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
+
+    def mixing_stack(state: FedState, num_rounds: int):
+        """Per-round mixing for the scan driver: ``(R, K, K)`` eta and
+        ``(R,)`` gamma. Static topology broadcasts the one hoisted
+        graph; a mobility scenario re-derives radio-range links every
+        round (ring transport: gated to the physical ring — links the
+        transport cannot carry never appear)."""
+        from repro import mobility as mobility_lib
+        if not mobile:
+            eta, gamma = _mixing(state)
+            return mobility_lib.constant_stacks(eta, gamma, num_rounds)
+        mask = None
+        if isinstance(transport, transport_lib.RingShardTransport):
+            mask = topology.adjacency("ring", fed.num_nodes)
+        return mobility_lib.scenario_stacks(
+            fed.mobility, num_rounds, fed.num_nodes, rule=mix_rule,
+            gamma_cap=fed.gamma, ratios=state.ratios, sizes=state.sizes,
+            mask=mask)
 
     @partial(jax.jit, static_argnames=("num_rounds", "max_items"),
              donate_argnums=(0,))
     def _scan_rounds(state: FedState, data, rng: jax.Array,
-                     num_rounds: int, max_items: int, node_sizes):
+                     num_rounds: int, max_items: int, node_sizes,
+                     etas, gammas):
         # (R, K, S, B) minibatch indices for ALL rounds, sampled on device.
         shape = (num_rounds, fed.num_nodes, fed.local_steps,
                  train.batch_size)
@@ -268,18 +308,21 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             idx = jnp.minimum(
                 (u * node_sizes[None, :, None, None]).astype(jnp.int32),
                 node_sizes.astype(jnp.int32)[None, :, None, None] - 1)
-        # ratios/sizes are fixed for the whole run, so the mixing weights
-        # are round-invariant: hoist them out of the scanned body.
-        eta, gamma = _mixing(state)
+        # The mixing weights ride the scan as PER-ROUND inputs: slice r
+        # of the (R, K, K) eta stack (and (R,) gamma) is consumed by
+        # round r's exchange. A constant stack (static topology) is
+        # numerically identical to the hoisted round-invariant weights;
+        # a mobility stack changes the graph under the scan for free.
 
         if fed.algorithm == "dpsgd":
-            def body(s, idx_r):
+            def body(s, xs):
+                idx_r, eta_r, gamma_r = xs
                 # gossip-per-step needs the whole round batch up front
                 batches = jax.tree.map(
                     lambda arr: jax.vmap(lambda a, i: a[i])(arr, idx_r),
                     data)
-                return round_body(s, batches, eta, gamma)
-            return jax.lax.scan(body, state, idx)
+                return round_body(s, batches, eta_r, gamma_r)
+            return jax.lax.scan(body, state, (idx, etas, gammas))
 
         # The scan carries params as the FLAT (K, P) buffer: each round is
         # mix (no pack needed) -> unpack once for the local steps -> pack
@@ -289,10 +332,11 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         layout = flatten.make_layout(state.params)
         buf0, _ = flatten.flatten(state.params, layout)
 
-        def body(carry, idx_r):
+        def body(carry, xs):
+            idx_r, eta_r, gamma_r = xs
             buf, opt_state, rnd, tstate = carry
-            mixed, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
-                                    tstate, rnd)
+            mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
+                                    layout, tstate, rnd)
             phi = flatten.unflatten(mixed, layout)
             params, opt_state, loss = local_updates_from_idx(
                 phi, opt_state, data, idx_r)
@@ -301,21 +345,24 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 "loss": loss,
                 "disagreement": flatten.disagreement_flat(new_buf,
                                                           layout.total),
-                "gamma": gamma,
+                "gamma": gamma_r,
             }
             if eval_fn is not None:
                 metrics["eval"] = jax.vmap(eval_fn)(params)
             return (new_buf, opt_state, rnd + 1, tstate), metrics
 
         (buf, opt_state, rnd, tstate), metrics = jax.lax.scan(
-            body, (buf0, state.opt, state.round, state.tstate), idx)
+            body, (buf0, state.opt, state.round, state.tstate),
+            (idx, etas, gammas))
         final = FedState(flatten.unflatten(buf, layout), opt_state,
                          state.ratios, state.sizes, rnd, tstate)
         return final, metrics
 
     def run_rounds(state: FedState, data, num_rounds: int,
                    rng: Optional[jax.Array] = None,
-                   n_items: Optional[jax.Array] = None):
+                   n_items: Optional[jax.Array] = None,
+                   eta_stack: Optional[jax.Array] = None,
+                   gamma_stack: Optional[jax.Array] = None):
         """Device-resident multi-round driver.
 
         Runs ``num_rounds`` full C-DFL rounds (consensus + local steps)
@@ -333,6 +380,12 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                resident arrays are padded to a common N (ragged nodes,
                e.g. after CND dedup); sampling stays uniform over each
                node's true count.
+        eta_stack: optional explicit (num_rounds, K, K) per-round mixing
+               weights overriding :func:`mixing_stack` (round r's
+               exchange uses slice r — time-varying topologies).
+        gamma_stack: optional (num_rounds,) per-round step sizes; derived
+               from ``eta_stack`` rows via the paper's stability bound
+               when omitted.
         Returns (final_state, metrics) with every metric stacked along a
         leading (num_rounds,) axis.
         """
@@ -342,8 +395,25 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         max_items = jax.tree.leaves(data)[0].shape[1]
         if n_items is not None:
             n_items = jnp.asarray(n_items)
+        if eta_stack is None:
+            etas, gammas = mixing_stack(state, num_rounds)
+            if gamma_stack is not None:
+                gammas = jnp.asarray(gamma_stack, jnp.float32)
+        else:
+            from repro import mobility as mobility_lib
+            etas = jnp.asarray(eta_stack, jnp.float32)
+            gammas = (mobility_lib.gamma_stack(etas, fed.gamma)
+                      if gamma_stack is None
+                      else jnp.asarray(gamma_stack, jnp.float32))
+        k = fed.num_nodes
+        if etas.shape != (num_rounds, k, k):
+            raise ValueError(f"eta stack shape {etas.shape} != "
+                             f"{(num_rounds, k, k)}")
+        if gammas.shape != (num_rounds,):
+            raise ValueError(f"gamma stack shape {gammas.shape} != "
+                             f"{(num_rounds,)}")
         return _scan_rounds(state, data, rng, num_rounds, max_items,
-                            n_items)
+                            n_items, etas, gammas)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
-                   run_rounds=run_rounds)
+                   run_rounds=run_rounds, mixing_stack=mixing_stack)

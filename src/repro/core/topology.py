@@ -11,22 +11,35 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def adjacency(kind: str, k: int) -> np.ndarray:
-    """(K, K) 0/1 adjacency, no self loops."""
-    a = np.zeros((k, k), dtype=np.float32)
+def adjacency(kind: str, k: int, *, seed: int = 0,
+              edge_prob: float = 0.5) -> np.ndarray:
+    """(K, K) 0/1 adjacency, no self loops, symmetric.
+
+    Built from an undirected edge SET, so degenerate sizes come out
+    right by construction (a K=2 ring is the single edge {0,1}, not a
+    double edge — the seed code special-cased this after the fact).
+
+    ``erdos``: G(K, p) with ``edge_prob`` and a deterministic ``seed`` —
+    a fuzz source for partition-tolerance tests; connectivity is NOT
+    guaranteed (that is the point).
+    """
+    edges: set[tuple[int, int]] = set()
     if kind == "ring":
-        for i in range(k):
-            a[i, (i - 1) % k] = 1.0
-            a[i, (i + 1) % k] = 1.0
-        if k == 2:
-            a = np.minimum(a, 1.0)
+        edges = {tuple(sorted((i, (i + 1) % k))) for i in range(k)
+                 if i != (i + 1) % k}
     elif kind == "full":
-        a = np.ones((k, k), np.float32) - np.eye(k, dtype=np.float32)
+        edges = {(i, j) for i in range(k) for j in range(i + 1, k)}
     elif kind == "chain":
-        for i in range(k - 1):
-            a[i, i + 1] = a[i + 1, i] = 1.0
+        edges = {(i, i + 1) for i in range(k - 1)}
+    elif kind == "erdos":
+        rng = np.random.default_rng(np.random.SeedSequence([seed, k]))
+        edges = {(i, j) for i in range(k) for j in range(i + 1, k)
+                 if rng.random() < edge_prob}
     else:
         raise ValueError(f"unknown topology {kind!r}")
+    a = np.zeros((k, k), dtype=np.float32)
+    for i, j in edges:
+        a[i, j] = a[j, i] = 1.0
     return a
 
 
@@ -57,16 +70,63 @@ def datasize_mixing(adj: jnp.ndarray, sizes: jnp.ndarray) -> jnp.ndarray:
 def metropolis_mixing(adj: jnp.ndarray) -> jnp.ndarray:
     """Metropolis-Hastings weights (beyond-paper): doubly stochastic, hence
     provably consensus-convergent on any connected graph.
-    W[k,i] = 1/(1+max(d_k,d_i)) for edges; W[k,k] = 1 - sum."""
+    W[k,i] = 1/(1+max(d_k,d_i)) for edges; W[k,k] = 1 - sum.
+
+    Weighted adjacencies (mobility link quality) scale each edge by its
+    link weight ONCE and use the weighted degree — adj's zeros already
+    mask off-graph entries, so no extra mask multiply (which would
+    square the weights)."""
     deg = adj.sum(axis=1)
-    w = adj / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
-    w = w * adj
-    return w  # neighbor part only; self weight handled by consensus step
+    return adj / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
+    # neighbor part only; self weight handled by consensus step
+
+
+# Which mixing rule each algorithm's exchange uses (paper Sec. 5.3).
+# Shared by the trainer's static eta_fn and the mobility subsystem's
+# per-round stacks so the two paths can never diverge.
+ALGORITHM_MIXING = {
+    "cdfl": "cnd",
+    "cfa": "datasize",
+    "fedavg": "datasize",
+    "cdfa_m": "uniform",
+    "dpsgd": "uniform",
+    "metropolis": "metropolis",
+}
+
+
+def mixing_weights(adj: jnp.ndarray, rule: str,
+                   ratios: jnp.ndarray | None = None,
+                   sizes: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dispatch to the selected mixing rule on ONE (possibly weighted)
+    (K, K) adjacency. Weighted adjacencies (mobility link quality)
+    compose naturally: every rule multiplies its per-neighbor weight by
+    the link weight before row-normalizing, and rows with no neighbors
+    come out all-zero (pure self-update) rather than NaN."""
+    if rule == "cnd":
+        return cnd_mixing(adj, ratios)
+    if rule == "datasize":
+        return datasize_mixing(adj, sizes)
+    if rule == "uniform":
+        return uniform_mixing(adj)
+    if rule == "metropolis":
+        return metropolis_mixing(adj)
+    raise ValueError(f"unknown mixing rule {rule!r} "
+                     f"(choose from cnd|datasize|uniform|metropolis)")
 
 
 def max_row_sum(eta: jnp.ndarray) -> jnp.ndarray:
     """∇ = max_k sum_i eta[k,i] — paper's bound: gamma in (0, 1/∇)."""
     return eta.sum(axis=1).max()
+
+
+def stable_gamma(eta: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Consensus step size for ONE round's eta: the configured ``cap``
+    clipped to the paper's stability bound gamma < 1/∇ (0.99 safety
+    factor; empty graphs — ∇ = 0 — keep the cap, eq. 5 then degrades to
+    a self-update regardless of gamma). The ONE definition shared by the
+    trainer's hoisted path and the mobility per-round stacks."""
+    return jnp.minimum(jnp.asarray(cap, jnp.float32),
+                       0.99 / jnp.maximum(max_row_sum(eta), 1e-6))
 
 
 def consensus_matrix(eta: jnp.ndarray, gamma: float) -> jnp.ndarray:

@@ -26,6 +26,8 @@ import jax
 
 from repro.configs.base import INPUT_SHAPES, FedConfig, TrainConfig
 from repro.configs.registry import ARCHS, get_arch
+from repro.core import flatten, topology
+from repro.core import transport as transport_lib
 from repro.launch import mesh as meshlib
 from repro.launch import roofline, sharding, steps
 
@@ -56,7 +58,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                verbose: bool = True, return_artifacts: bool = False,
                fed_override: int | None = None,
                train_cfg: TrainConfig | None = None,
-               unroll: bool = True) -> dict:
+               unroll: bool = True, transport: str = "dense",
+               wire_dtype: str = "f32") -> dict:
     shape = INPUT_SHAPES[shape_name]
     cfg, fed_nodes, window = _policy(arch, shape_name)
     if fed_override:
@@ -65,10 +68,15 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     pmesh = meshlib.make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
 
+    fed_layout = None
     if shape.mode == "train":
         fmesh = meshlib.make_fed_mesh(pmesh, fed_nodes)
-        fed_cfg = FedConfig(num_nodes=fed_nodes)
+        fed_cfg = FedConfig(num_nodes=fed_nodes, transport=transport,
+                            wire_dtype=wire_dtype)
         state = steps.fed_state_struct(cfg, fed_nodes, train)
+        # static pack layout of ONE node's params (leading F stripped):
+        # prices the transport's per-link consensus payload below
+        fed_layout = flatten.make_layout(state.params)
         # FSDP (ZeRO-3 over dp) only when a replica + optimizer state is
         # too big to replicate within the node's dp group
         use_fsdp = cfg.param_count() * 10 / fmesh.shape["tp"] > 4e9
@@ -129,6 +137,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = roofline.parse_collectives(hlo)
     n_dev = mesh_used.devices.size
@@ -140,10 +150,23 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         collectives=colls,
         model_flops=mf,
     )
+    consensus_bytes = 0.0
+    if fed_layout is not None:
+        # collective term reads the SELECTED transport's wire bytes
+        # (bf16 / ring variants), not the dense-f32 roll the HLO lowered
+        tr_obj = transport_lib.make_transport(fed_cfg)
+        adj = topology.adjacency(fed_cfg.topology, fed_nodes)
+        rl = rl.with_consensus(tr_obj, fed_layout, adj,
+                               devices_per_node=n_dev // fed_nodes)
+        consensus_bytes = roofline.transport_consensus_bytes(
+            tr_obj, fed_layout, adj)
     rec = {
         "arch": arch, "shape": shape_name,
         "multi_pod": multi_pod, "devices": n_dev,
         "fed_nodes": fed_nodes if shape.mode == "train" else 0,
+        "transport": transport if shape.mode == "train" else None,
+        "wire_dtype": wire_dtype if shape.mode == "train" else None,
+        "consensus_wire_bytes_per_node": consensus_bytes,
         "window_override": window,
         "compile_s": round(compile_s, 1),
         "bytes_per_device": {
@@ -187,6 +210,15 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="layer-scan mode (fast compile; roofline flops "
                          "undercount loop bodies — lowering check only)")
+    ap.add_argument("--transport", choices=transport_lib.TRANSPORTS,
+                    default="dense",
+                    help="consensus transport backend priced into the "
+                         "collective roofline term (train shapes)")
+    ap.add_argument("--wire-dtype",
+                    choices=sorted(transport_lib.WIRE_DTYPES),
+                    default="f32",
+                    help="exchanged-buffer wire format for the "
+                         "collective term (bf16 halves consensus bytes)")
     args = ap.parse_args()
 
     combos = []
@@ -202,7 +234,9 @@ def main() -> None:
         try:
             records.append(dryrun_one(arch, shape,
                                       multi_pod=args.multi_pod,
-                                      unroll=not args.fast))
+                                      unroll=not args.fast,
+                                      transport=args.transport,
+                                      wire_dtype=args.wire_dtype))
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             traceback.print_exc()
             failures.append({"arch": arch, "shape": shape,

@@ -9,11 +9,21 @@ cost_analysis, so we parse the compiled HLO text and sum the result-shape
 bytes of every collective op, weighted by a wire factor (ring all-reduce
 moves ~2x the buffer; the others ~1x). Hardware: TPU v5e —
 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The CONSENSUS share of the collective term is transport-aware: the
+compiled fed train step always lowers the dense f32 ring roll, but the
+selected ``repro.core.transport`` backend may put half the bytes on the
+wire (bf16) or restrict links to the physical ring —
+:func:`transport_consensus_bytes` prices the exchange from the
+transport's own ``wire_bytes(layout)`` so ``dryrun_*.json`` sweeps
+reflect the backend that would actually run (see
+``Roofline.with_consensus``).
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
+from dataclasses import replace as dataclass_replace
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -77,6 +87,21 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     return stats
 
 
+def transport_consensus_bytes(transport, layout, adj) -> float:
+    """Per-NODE per-round bytes the eq. 5 exchange puts on the wire for
+    the selected transport backend.
+
+    ``transport.wire_bytes(layout)`` is the per-link payload at the wire
+    dtype (bf16 halves it; the ring transport's shifted-copy exchange
+    and the dense matmul both move one payload per link); the graph's
+    worst-node degree gives the link count. This replaces the dense-f32
+    assumption baked into the compiled HLO's collective-permute bytes.
+    """
+    import numpy as np
+    degree = float(np.asarray(adj).sum(axis=1).max())
+    return degree * transport.wire_bytes(layout)
+
+
 @dataclass
 class Roofline:
     flops: float                 # per device
@@ -84,6 +109,23 @@ class Roofline:
     wire_bytes: float            # per device
     collectives: CollectiveStats
     model_flops: float           # analytic useful flops per device
+
+    def with_consensus(self, transport, layout, adj,
+                       devices_per_node: int) -> "Roofline":
+        """Re-price the consensus share of the collective term for the
+        selected transport backend.
+
+        The measured collective-permute bytes (the lowered dense f32
+        ring roll — the only collective-permute in the fed train HLO)
+        are swapped for :func:`transport_consensus_bytes` spread over
+        the node's device group. Non-consensus collectives (TP
+        all-reduce/all-gather) are untouched.
+        """
+        measured = self.collectives.bytes_by_op.get("collective-permute", 0)
+        analytic = (transport_consensus_bytes(transport, layout, adj)
+                    / max(devices_per_node, 1))
+        return dataclass_replace(
+            self, wire_bytes=self.wire_bytes - measured + analytic)
 
     @property
     def t_compute(self) -> float:

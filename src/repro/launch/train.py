@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import mobility as mobility_lib
 from repro.checkpointing import save
-from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.core import baselines
 from repro.core import transport as transport_lib
@@ -67,13 +68,44 @@ def main() -> None:
                          "bytes (f32 master copy is kept)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="gossip bounded delay in rounds (0 = synchronous)")
+    ap.add_argument("--mobility",
+                    choices=("static",) + tuple(sorted(
+                        mobility_lib.traces.TRACE_KINDS)),
+                    default="static",
+                    help="vehicular mobility scenario: per-round radio-"
+                         "range topologies drive the consensus exchange "
+                         "(static = the frozen --topology graph)")
+    ap.add_argument("--range", type=float, default=250.0, dest="radio_range",
+                    help="V2V radio range in meters (mobility scenarios)")
+    ap.add_argument("--speed", type=float, default=20.0,
+                    help="mean vehicle speed in m/s (mobility scenarios)")
+    ap.add_argument("--speed-jitter", type=float, default=0.3,
+                    help="fractional per-vehicle speed spread (platoon "
+                         "split rate)")
+    ap.add_argument("--mobility-seed", type=int, default=0,
+                    help="trace RNG seed (deterministic per seed)")
+    ap.add_argument("--link-quality", choices=mobility_lib.links.LINK_QUALITIES,
+                    default="binary",
+                    help="link weighting: binary unit-disk or quadratic "
+                         "distance-faded quality")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
+
+    mobility = None
+    if args.mobility != "static":
+        if args.driver != "scan":
+            ap.error("--mobility needs --driver scan (time-varying "
+                     "topologies ride the multi-round scan)")
+        mobility = MobilityConfig(
+            kind=args.mobility, radio_range=args.radio_range,
+            speed=args.speed, speed_jitter=args.speed_jitter,
+            seed=args.mobility_seed, link_quality=args.link_quality)
 
     cfg = get_smoke_arch(args.arch)
     fed = FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
                     algorithm=args.algorithm, transport=args.transport,
-                    wire_dtype=args.wire_dtype, staleness=args.staleness)
+                    wire_dtype=args.wire_dtype, staleness=args.staleness,
+                    mobility=mobility)
     train = TrainConfig(learning_rate=args.lr, batch_size=args.batch)
 
     # per-node synthetic corpora with injected duplicates (the paper's
@@ -102,6 +134,22 @@ def main() -> None:
           f"/{args.wire_dtype}"
           f"{f'/stale{args.staleness}' if args.staleness else ''} "
           f"CND ratios={np.round(np.asarray(state.ratios), 3)}")
+    if mobility is not None:
+        # report the graph the run actually uses: ring transport gates
+        # radio links to the physical ring
+        from repro.core import topology
+        mask = (topology.adjacency("ring", args.nodes)
+                if args.transport == "ring" else None)
+        stats = mobility_lib.handover_stats(
+            mobility_lib.adjacency_stack(mobility, args.rounds, args.nodes,
+                                         mask=mask))
+        print(f"mobility={mobility.kind} range={mobility.radio_range:.0f}m "
+              f"speed={mobility.speed:.0f}m/s: "
+              f"{stats['links_per_round']:.1f} links/round, "
+              f"churn={stats['churn_rate']:.3f}, "
+              f"{stats['handovers']} handovers, "
+              f"{stats['partitioned_rounds']}/{stats['rounds']} "
+              f"partitioned rounds")
 
     if args.driver == "scan":
         # token/label views of the resident per-node corpora: (K, N, T)

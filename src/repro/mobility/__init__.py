@@ -1,0 +1,72 @@
+"""Vehicular mobility subsystem: time-varying consensus topologies.
+
+C-DFL targets connected vehicles, but a frozen ring cannot express the
+paper's actual setting — vehicles moving in and out of radio range
+between rounds. This package closes that gap in three host-side stages,
+each usable on its own:
+
+    positions  = traces.trace(kind, R, K, ...)          # (R, K, 2) kinematics
+    adj_stack  = links.radio_adjacency(positions, rng)  # (R, K, K) link weights
+    etas       = mixing.eta_stack(adj_stack, rule, ...) # (R, K, K) mixing
+
+:func:`scenario_stacks` composes them from a
+:class:`repro.configs.base.MobilityConfig` and is what
+``Trainer.run_rounds`` calls when ``FedConfig.mobility`` is set: the
+returned eta/gamma stacks ride the round scan as per-round inputs (one
+``(K, K)`` slice consumed per scanned step) instead of the hoisted
+round-invariant weights of the static path.
+
+Ring-transport caveat: ``RingShardTransport`` physically moves data only
+along the ring, so under mobility its per-round graph is the RING GATED
+BY RADIO RANGE — pass ``mask=topology.adjacency("ring", k)`` (done
+automatically by the trainer) so out-of-range ring links drop but no
+phantom non-ring links appear that the transport could never carry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import MobilityConfig
+from repro.mobility import links, mixing, traces
+from repro.mobility.links import handover_stats, num_components, radio_adjacency
+from repro.mobility.mixing import constant_stacks, eta_stack, gamma_stack
+from repro.mobility.traces import trace
+
+__all__ = [
+    "MobilityConfig", "adjacency_stack", "scenario_stacks",
+    "trace", "radio_adjacency", "handover_stats", "num_components",
+    "eta_stack", "gamma_stack", "constant_stacks",
+    "links", "mixing", "traces",
+]
+
+
+def adjacency_stack(mob: MobilityConfig, rounds: int, k: int,
+                    mask: np.ndarray | None = None) -> np.ndarray:
+    """(R, K, K) link-weight stack for a mobility scenario.
+
+    ``mask``: optional static 0/1 adjacency intersected with every
+    round's radio graph (the ring-transport physical constraint).
+    """
+    positions = trace(mob.kind, rounds, k,
+                      speed=mob.speed, speed_jitter=mob.speed_jitter,
+                      area=mob.area, dt=mob.dt, seed=mob.seed)
+    adj = radio_adjacency(positions, mob.radio_range,
+                          link_quality=mob.link_quality,
+                          min_quality=mob.min_quality)
+    if mask is not None:
+        adj = adj * np.asarray(mask, np.float32)[None]
+    return adj
+
+
+def scenario_stacks(mob: MobilityConfig, rounds: int, k: int, *,
+                    rule: str, gamma_cap: float,
+                    ratios=None, sizes=None,
+                    mask: np.ndarray | None = None):
+    """Compose trace -> links -> mixing for one training run.
+
+    Returns ``(etas (R, K, K), gammas (R,))`` device arrays ready to
+    ride the ``run_rounds`` scan.
+    """
+    adj = adjacency_stack(mob, rounds, k, mask=mask)
+    etas = eta_stack(adj, rule, ratios=ratios, sizes=sizes)
+    return etas, gamma_stack(etas, gamma_cap)

@@ -1,0 +1,100 @@
+"""Radio-range link derivation: position traces -> per-round graphs.
+
+Turns a ``(R, K, 2)`` position trace into the ``(R, K, K)`` weighted
+adjacency stack the consensus layer consumes. Link weight models the
+V2V channel coarsely:
+
+* ``binary``    — 1 inside ``radio_range``, 0 outside (unit-disk graph);
+* ``quadratic`` — ``1 - (d/range)^2`` clipped to [0, 1]: free-space
+  path-loss-shaped quality that fades smoothly toward the range edge,
+  with weights below ``min_quality`` dropped (a link that barely closes
+  the budget is not worth a model transfer).
+
+The stack is plain numpy (host-side, built once per run); the trainer
+moves it to device as the scan's per-round mixing input. Nothing here
+guarantees connectivity — partitions are a *feature* of the vehicular
+setting, and downstream mixing renormalizes per component
+(repro.mobility.mixing).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+LINK_QUALITIES = ("binary", "quadratic")
+
+
+def pairwise_distances(positions: np.ndarray) -> np.ndarray:
+    """(R, K, 2) positions -> (R, K, K) Euclidean distances."""
+    d = positions[:, :, None, :] - positions[:, None, :, :]
+    return np.sqrt((d.astype(np.float64) ** 2).sum(-1))
+
+
+def radio_adjacency(positions: np.ndarray, radio_range: float, *,
+                    link_quality: str = "binary",
+                    min_quality: float = 0.05) -> np.ndarray:
+    """(R, K, K) float32 link-weight stack from a position trace.
+
+    Symmetric, zero diagonal, weights in [0, 1]. ``binary`` gives the
+    unit-disk graph; ``quadratic`` additionally down-weights marginal
+    links so the mixing trusts strong (near) neighbors more.
+    """
+    if radio_range <= 0:
+        raise ValueError(f"radio_range must be positive, got {radio_range}")
+    if link_quality not in LINK_QUALITIES:
+        raise ValueError(f"unknown link_quality {link_quality!r} "
+                         f"(choose from {LINK_QUALITIES})")
+    d = pairwise_distances(positions)
+    if link_quality == "binary":
+        w = (d <= radio_range).astype(np.float32)
+    else:
+        w = np.clip(1.0 - (d / radio_range) ** 2, 0.0, 1.0)
+        w = np.where(w >= min_quality, w, 0.0).astype(np.float32)
+    r, k = w.shape[0], w.shape[1]
+    w[:, np.arange(k), np.arange(k)] = 0.0
+    return w
+
+
+def handover_stats(adj_stack: np.ndarray) -> dict:
+    """Churn summary of a ``(R, K, K)`` adjacency stack.
+
+    * ``links_per_round``   — mean undirected link count;
+    * ``handovers``         — total link state flips (up->down or
+      down->up) between consecutive rounds, undirected;
+    * ``churn_rate``        — handovers / (rounds-1) / possible links:
+      the fraction of node pairs whose connectivity changes per round;
+    * ``isolated_node_rounds`` — (round, node) pairs with degree 0;
+    * ``partitioned_rounds``   — rounds whose graph is disconnected.
+    """
+    up = np.asarray(adj_stack) > 0
+    r, k = up.shape[0], up.shape[1]
+    iu = np.triu_indices(k, 1)
+    links = up[:, iu[0], iu[1]]                        # (R, K*(K-1)/2)
+    flips = int(np.sum(links[1:] != links[:-1])) if r > 1 else 0
+    possible = max(links.shape[1], 1)
+    return {
+        "rounds": r,
+        "links_per_round": float(links.sum(1).mean()) if r else 0.0,
+        "handovers": flips,
+        "churn_rate": flips / max(r - 1, 1) / possible,
+        "isolated_node_rounds": int((~up.any(axis=2)).sum()),
+        "partitioned_rounds": int(sum(num_components(up[t]) > 1
+                                      for t in range(r))),
+    }
+
+
+def num_components(adj: np.ndarray) -> int:
+    """Connected components of one (K, K) adjacency (union-find)."""
+    k = adj.shape[0]
+    parent = list(range(k))
+
+    def find(i):
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    for i in range(k):
+        for j in range(i + 1, k):
+            if adj[i, j] > 0:
+                parent[find(i)] = find(j)
+    return len({find(i) for i in range(k)})

@@ -1,0 +1,52 @@
+"""Per-round mixing stacks: (R, K, K) link weights -> (R, K, K) eta.
+
+The static trainer computes ONE eta from ONE graph and hoists it out of
+the round scan; mobility replaces that with a precomputed stack the scan
+consumes one slice per round. The per-round rule is the SAME
+``repro.core.topology.mixing_weights`` dispatch the static path uses
+(vmapped over rounds), so a constant stack is numerically identical to
+the hoisted scan — the equivalence the acceptance tests pin down.
+
+Partition tolerance falls out of the row-normalization convention: a
+node with no in-range neighbors gets an all-zero eta row (eq. 5 then
+degrades to a pure self-update, no NaN), and each connected component
+renormalizes only over its own members — disconnected platoon halves
+train independently until they re-merge.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+
+
+def eta_stack(adj_stack: jax.Array, rule: str,
+              ratios: jax.Array | None = None,
+              sizes: jax.Array | None = None) -> jax.Array:
+    """(R, K, K) per-round mixing weights from a link-weight stack.
+
+    ``rule`` is a ``topology.mixing_weights`` rule name (use
+    ``topology.ALGORITHM_MIXING[fed.algorithm]``); ``ratios``/``sizes``
+    are the round-invariant CND distinct ratios / raw dataset sizes.
+    """
+    adj_stack = jnp.asarray(adj_stack, jnp.float32)
+    return jax.vmap(
+        lambda a: topology.mixing_weights(a, rule, ratios, sizes)
+    )(adj_stack)
+
+
+def gamma_stack(etas: jax.Array, gamma_cap: float) -> jax.Array:
+    """(R,) per-round consensus step sizes: ``topology.stable_gamma``
+    (the same bound the hoisted path applies) vmapped over rounds — a
+    sparse round may admit, and benefit from, a larger step than a
+    dense one."""
+    return jax.vmap(lambda e: topology.stable_gamma(e, gamma_cap))(etas)
+
+
+def constant_stacks(eta: jax.Array, gamma, rounds: int):
+    """Broadcast one (K, K) eta / scalar gamma to (R, K, K) / (R,) —
+    the static-topology degenerate case of the time-varying scan."""
+    eta = jnp.asarray(eta)
+    return (jnp.broadcast_to(eta, (rounds,) + eta.shape),
+            jnp.broadcast_to(jnp.asarray(gamma, jnp.float32), (rounds,)))

@@ -331,6 +331,35 @@ def test_make_transport_validates():
                       transport.DenseTransport)
 
 
+def test_roofline_collective_term_reads_transport_wire_bytes():
+    """Dry-run satellite: the roofline's consensus collective term must
+    price the SELECTED backend (bf16 halves, links from the graph
+    degree), replacing the dense-f32 collective-permute assumption."""
+    from repro.launch import roofline
+    params = _mlp_like()
+    layout = flatten.make_layout(params)
+    ring = topology.adjacency("ring", 4)
+    full = topology.adjacency("full", 4)
+    f32 = roofline.transport_consensus_bytes(
+        transport.DenseTransport(), layout, ring)
+    assert f32 == 2 * layout.padded * 4            # 2 links, f32
+    b16 = roofline.transport_consensus_bytes(
+        transport.RingShardTransport(wire_dtype="bf16"), layout, ring)
+    assert b16 * 2 == f32                          # bf16 halves the wire
+    assert roofline.transport_consensus_bytes(
+        transport.DenseTransport(), layout, full) == 3 * layout.padded * 4
+    stats = roofline.CollectiveStats(
+        bytes_by_op={"collective-permute": 1000.0, "all-reduce": 500.0},
+        count_by_op={"collective-permute": 2, "all-reduce": 1})
+    rl = roofline.Roofline(flops=1.0, hbm_bytes=1.0,
+                           wire_bytes=stats.wire_bytes, collectives=stats,
+                           model_flops=1.0)
+    rl2 = rl.with_consensus(transport.RingShardTransport(wire_dtype="bf16"),
+                            layout, ring, devices_per_node=64)
+    # non-consensus collectives (the 2x-weighted all-reduce) untouched
+    assert rl2.wire_bytes == pytest.approx(2000.0 - 1000.0 + b16 / 64)
+
+
 def test_fed_ring_perms_matches_axis_derived():
     from types import SimpleNamespace
     from repro.launch import mesh as meshlib
