@@ -246,15 +246,17 @@ def bench_scan_consensus_rounds(quick: bool = False):
 
 def bench_scan_rounds(quick: bool = False):
     """Multi-round C-DFL run (4 nodes, paper MLP, 10 local steps):
-    device-resident scan (run_rounds) vs the SEED driver — per-round
-    Python loop with per-leaf consensus/disagreement, host-numpy
-    FederatedBatcher sampling, H2D transfer, one jit dispatch and a
-    metrics host-sync per round (exactly what the seed launch/train.py
-    and benchmark loop paid every round)."""
+    device-resident scan through the ``repro.experiment`` Session façade
+    (the user-facing path — compile once, ONE scan per run) vs the SEED
+    driver — per-round Python loop with per-leaf consensus/disagreement,
+    host-numpy FederatedBatcher sampling, H2D transfer, one jit dispatch
+    and a metrics host-sync per round (exactly what the seed
+    launch/train.py and benchmark loop paid every round)."""
     from repro.configs.base import FedConfig, TrainConfig
     from repro.configs.paper_models import MLP_CONFIG
-    from repro.core import baselines, topology
+    from repro.core import topology
     from repro.data import pipeline, synthetic
+    from repro.experiment import Experiment
     from repro.kernels import ref
     from repro.models import simple
     from repro.optim import adam as make_adam
@@ -264,14 +266,15 @@ def bench_scan_rounds(quick: bool = False):
     nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
     batcher = pipeline.FederatedBatcher(nodes, 32, 10)
     loss_fn = simple.make_mlp_loss(MLP_CONFIG)
-    tr = baselines.cdfl(lambda p, b: loss_fn(p, b),
-                        FedConfig(num_nodes=4, local_steps=10),
-                        TrainConfig(learning_rate=1e-3))
-    state0 = tr.init(jax.random.PRNGKey(0),
-                     lambda r: simple.mlp_init(r, MLP_CONFIG),
-                     jnp.asarray(batcher.node_items()))
+    exp = Experiment.from_parts(
+        lambda p, b: loss_fn(p, b),
+        lambda r: simple.mlp_init(r, MLP_CONFIG),
+        fed=FedConfig(num_nodes=4, local_steps=10),
+        train=TrainConfig(learning_rate=1e-3))
     data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
             "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    node_items = jnp.asarray(batcher.node_items())
+    state0 = exp.compile(data, node_items).state
 
     # --- seed path: per-round loop over the seed round (per-leaf ops) ----
     opt = make_adam(1e-3, 0.9, 0.999, 1e-7, 0.0, 0.0)
@@ -312,18 +315,16 @@ def bench_scan_rounds(quick: bool = False):
                   f"disagree={float(d):.2e}", file=log)   # log line, as the
         return jax.tree.leaves(p)[0]             # seed launch loop did
 
-    # --- flat-engine path: one scan over all rounds ----------------------
-    # run_rounds donates its state, so pre-build one fresh state per call
-    # (init cost — CND sketching — stays outside the timed region).
-    states = [tr.init(jax.random.PRNGKey(0),
-                      lambda r: simple.mlp_init(r, MLP_CONFIG),
-                      jnp.asarray(batcher.node_items()))
-              for _ in range(1 + reps)]          # 1 warmup + reps timed
+    # --- flat-engine path: one Session scan over all rounds --------------
+    # the scan donates its state, so pre-compile one fresh session per
+    # call (init cost — CND sketching — stays outside the timed region;
+    # the trainer/jit cache is shared across sessions via the Experiment).
+    sessions = [exp.compile(data, node_items)
+                for _ in range(1 + reps)]        # 1 warmup + reps timed
 
     def run_scan():
-        s, _m = tr.run_rounds(states.pop(), data, rounds,
-                              rng=jax.random.PRNGKey(7))
-        return jax.tree.leaves(s.params)[0]
+        res = sessions.pop().run(rounds, rng=jax.random.PRNGKey(7))
+        return jax.tree.leaves(res.state.params)[0]
 
     # interleave the two paths so background-load drift on the box hits
     # both equally; report medians

@@ -18,8 +18,8 @@ import numpy as np
 from repro import mobility
 from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
 from repro.configs.paper_models import MLP_CONFIG, VGG_CONFIG
-from repro.core import baselines
 from repro.data import pipeline, redundancy, synthetic
+from repro.experiment import EvalCallback, Experiment
 from repro.models import simple
 
 ALGS = ["cdfl", "cfa", "cdfa_m", "dpsgd"]
@@ -61,8 +61,8 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
     """Returns (rounds_to_target_per_node, final_acc_per_node, curve).
 
     All ``max_rounds`` rounds run device-resident under ONE
-    ``Trainer.run_rounds`` scan with a per-round ``eval_fn`` — no
-    per-round jit dispatch, host batching, or metrics sync (the seed
+    ``Session.run`` scan with a per-round :class:`EvalCallback` metric —
+    no per-round jit dispatch, host batching, or metrics sync (the seed
     host loop paid all three every round); rounds-to-target is read off
     the stacked accuracy array afterwards."""
     if model == "mlp":
@@ -102,12 +102,8 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
                     mobility=mob)
     train = TrainConfig(learning_rate=lr, batch_size=cfgm.batch_size,
                         beta1=cfgm.beta1, beta2=cfgm.beta2, eps=cfgm.eps)
-    tr = baselines.ALGORITHMS[alg](lambda p, b: loss(p, b), fed, train,
-                                   eval_fn=eval_fn)
     raw_items = pipeline.FederatedBatcher(nodes, cfgm.batch_size,
                                           local_steps).node_items()
-    state = tr.init(jax.random.PRNGKey(0), init_fn,
-                    jnp.asarray(raw_items))
     # resident node-stacked datasets; CND-dedup'd nodes are ragged, so
     # pad to a common N and restrict sampling to each node's true count
     n_per = np.asarray([d.x.shape[0] for d in train_nodes])
@@ -117,11 +113,14 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
             "y": jnp.asarray(np.stack(
                 [_pad_cycle(d.y, n_max) for d in train_nodes]))}
     n_items = None if (n_per == n_max).all() else jnp.asarray(n_per)
-    state, m = tr.run_rounds(state, data, max_rounds,
-                             rng=jax.random.PRNGKey(0), n_items=n_items)
+    session = Experiment.from_parts(
+        lambda p, b: loss(p, b), init_fn, fed=fed, train=train,
+    ).compile(data, raw_items, rng=jax.random.PRNGKey(0),
+              sample_rng=jax.random.PRNGKey(0), n_items=n_items)
+    result = session.run(max_rounds, callbacks=[EvalCallback(eval_fn)])
 
-    acc_rounds = np.asarray(m["eval"])           # (R, K)
-    losses = np.asarray(m["loss"])               # (R, K)
+    acc_rounds = np.asarray(result.metrics["eval"])      # (R, K)
+    losses = np.asarray(result.metrics["loss"])          # (R, K)
     curve = [(r + 1, float(losses[r].mean()), float(acc_rounds[r].mean()))
              for r in range(max_rounds)]
     hit = acc_rounds >= target

@@ -8,15 +8,14 @@ no server. Compare the same run on the frozen ring the paper used.
 
   PYTHONPATH=src python examples/mobility_platoon.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import mobility
 from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
 from repro.configs.paper_models import MLP_CONFIG
-from repro.core import baselines
 from repro.data import pipeline, synthetic
+from repro.experiment import Experiment
 from repro.models import simple
 
 K, ROUNDS = 8, 20
@@ -33,23 +32,24 @@ print(f"platoon trace: {stats['links_per_round']:.1f} links/round, "
 comps = [mobility.num_components(adj[t]) for t in range(ROUNDS)]
 print("components per round:", comps)
 
-# 2. per-vehicle datasets + C-DFL trainer with the mobility config
+# 2. per-vehicle datasets + the declared C-DFL experiment (the mobility
+#    kind is a registered trace plugin, validated at config construction)
 nodes = [synthetic.synthetic_mnist(seed=i, n=256, noise=2.0)
          for i in range(K)]
-trainer = baselines.cdfl(
-    (lambda loss: lambda p, b: loss(p, b))(simple.make_mlp_loss(MLP_CONFIG)),
-    FedConfig(num_nodes=K, gamma=0.5, local_steps=5, mobility=mob),
-    TrainConfig(learning_rate=1e-3, batch_size=32))
-state = trainer.init(
-    jax.random.PRNGKey(0), lambda r: simple.mlp_init(r, MLP_CONFIG),
-    jnp.asarray(pipeline.FederatedBatcher(nodes, 32, 5).node_items()))
+loss_fn = simple.make_mlp_loss(MLP_CONFIG)
+exp = Experiment.from_parts(
+    lambda p, b: loss_fn(p, b), lambda r: simple.mlp_init(r, MLP_CONFIG),
+    fed=FedConfig(num_nodes=K, gamma=0.5, local_steps=5, mobility=mob),
+    train=TrainConfig(learning_rate=1e-3, batch_size=32))
 
 # 3. all rounds under one scan — round r consumes eta stack slice r
 data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
         "y": jnp.asarray(np.stack([d.y for d in nodes]))}
-state, m = trainer.run_rounds(state, data, ROUNDS)
-loss = np.asarray(m["loss"])
-dis = np.asarray(m["disagreement"])
+session = exp.compile(
+    data, jnp.asarray(pipeline.FederatedBatcher(nodes, 32, 5).node_items()))
+result = session.run(ROUNDS)
+loss = np.asarray(result.metrics["loss"])
+dis = np.asarray(result.metrics["disagreement"])
 for r in range(0, ROUNDS, 4):
     print(f"round {r:2d}  comps={comps[r]}  loss={loss[r].mean():.3f}  "
           f"disagree={dis[r]:.2e}")

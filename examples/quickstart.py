@@ -1,44 +1,46 @@
 """Quickstart: C-DFL (consensus decentralized federated learning) in ~30
 lines of user code — 4 base stations on a ring, redundant local data,
-CND-weighted consensus + local Adam. Runs in <1 minute on CPU.
+CND-weighted consensus + local Adam, all through the declarative
+``repro.experiment`` API. Runs in <1 minute on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, TrainConfig
 from repro.configs.paper_models import MLP_CONFIG
-from repro.core import baselines
 from repro.data import pipeline, redundancy, synthetic
+from repro.experiment import Experiment
 from repro.models import simple
 
 # 1. per-station datasets — V2X-style redundancy: only 10-80% distinct
 nodes = [redundancy.inject_duplicates(
     synthetic.synthetic_mnist(seed=i, n=320, noise=2.0), ratio, seed=i)
     for i, ratio in enumerate([0.1, 0.3, 0.5, 0.8])]
+data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+        "y": jnp.asarray(np.stack([d.y for d in nodes]))}
 
-# 2. C-DFL trainer around any loss function
+# 2. declare the experiment around any loss function (every config
+#    string — transport, wire codec, mixing, algorithm — is a
+#    registered plugin name, validated at construction)
 loss = simple.make_mlp_loss(MLP_CONFIG)
-trainer = baselines.cdfl(
-    lambda p, b: loss(p, b),
-    FedConfig(num_nodes=4, topology="ring", gamma=0.5, local_steps=10),
-    TrainConfig(learning_rate=1e-3, batch_size=32))
+exp = Experiment.from_parts(
+    lambda p, b: loss(p, b), lambda r: simple.mlp_init(r, MLP_CONFIG),
+    fed=FedConfig(num_nodes=4, topology="ring", gamma=0.5, local_steps=10),
+    train=TrainConfig(learning_rate=1e-3, batch_size=32))
 
-# 3. init: CND sketches of each station's data drive the mixing weights
-batcher = pipeline.FederatedBatcher(nodes, 32, 10, seed=0)
-state = trainer.init(jax.random.PRNGKey(0),
-                     lambda r: simple.mlp_init(r, MLP_CONFIG),
-                     jnp.asarray(batcher.node_items()))
+# 3. compile: CND sketches of each station's data drive the mixing weights
+items = pipeline.FederatedBatcher(nodes, 32, 10, seed=0).node_items()
+session = exp.compile(data, jnp.asarray(items))
 print("CND distinct-data ratios (Ë_k, eq.7):",
-      np.round(np.asarray(state.ratios), 2))
+      np.round(np.asarray(session.state.ratios), 2))
 
-# 4. federated rounds: consensus exchange + local updates
-for r in range(10):
-    rb = batcher.next_round()
-    state, m = trainer.round(state, {"x": jnp.asarray(rb["x"]),
-                                     "y": jnp.asarray(rb["y"])})
-    print(f"round {r}: loss/station={np.round(np.asarray(m['loss']), 3)} "
-          f"disagreement={float(m['disagreement']):.2e}")
+# 4. federated rounds: ONE device-resident scan (consensus + local steps)
+result = session.run(10)
+loss_r = np.asarray(result.metrics["loss"])
+dis_r = np.asarray(result.metrics["disagreement"])
+for r in range(result.rounds):
+    print(f"round {r}: loss/station={np.round(loss_r[r], 3)} "
+          f"disagreement={dis_r[r]:.2e}")
 print("done — stations converged to a consensus model without any server.")

@@ -133,7 +133,7 @@ class MobilityConfig:
     (identical to ``FedConfig(mobility=None)``).
     """
 
-    kind: str = "static"         # static | platoon | manhattan | waypoint
+    kind: str = "static"         # "static" or a registered mobility trace
     radio_range: float = 250.0   # V2V radio range (m)
     speed: float = 20.0          # mean vehicle speed (m/s)
     speed_jitter: float = 0.3    # fractional per-vehicle speed spread
@@ -142,6 +142,12 @@ class MobilityConfig:
     seed: int = 0                # trace RNG seed (deterministic)
     link_quality: str = "binary"  # binary | quadratic distance weighting
     min_quality: float = 0.05    # weighted links below this are dropped
+
+    def __post_init__(self):
+        # plugin names fail HERE, listing the registered alternatives —
+        # not rounds deep inside trainer assembly
+        from repro.registry import validate_mobility_config
+        validate_mobility_config(self)
 
 
 @dataclass(frozen=True)
@@ -158,18 +164,25 @@ class FedConfig:
     cnd_hashes: int = 3              # paper uses 3 hash functions
     cnd_estimator: str = "paper_mean"  # paper_mean | linear_counting
     sig_bits: int = 64               # simhash signature width
-    # baseline selection: cdfl | cfa | cdfa_m | dpsgd | fedavg
+    # algorithm selection: a registered repro.registry.algorithms name
+    # (cdfl | cfa | cdfa_m | dpsgd | fedavg | metropolis | plugins)
     algorithm: str = "cdfl"
     cdfa_fraction: float = 1.0       # C-DFA(M): fraction of layers mixed
     # --- consensus transport (repro.core.transport) --------------------------
-    transport: str = "dense"         # dense | ring | gossip
-    wire_dtype: str = "f32"          # f32 | bf16 exchanged-buffer format
+    transport: str = "dense"         # registered transport plugin name
+    wire_dtype: str = "f32"          # registered wire codec plugin name
     staleness: int = 0               # gossip bounded delay (0 = synchronous)
     # --- vehicular mobility (repro.mobility) ---------------------------------
     # None (or kind="static"): one frozen graph, mixing hoisted out of the
     # round scan. Otherwise per-round radio-range topologies drive a
     # time-varying (R, K, K) eta stack through Trainer.run_rounds.
     mobility: Optional[MobilityConfig] = None
+
+    def __post_init__(self):
+        # transport / wire_dtype / mixing / algorithm are plugin names;
+        # typos fail HERE with the registered alternatives listed
+        from repro.registry import validate_fed_config
+        validate_fed_config(self)
 
 
 @dataclass(frozen=True)

@@ -1,5 +1,6 @@
-"""Baseline constructors (paper Sec. 5.3) — thin wrappers over the same
-trainer machinery so every algorithm sees identical data/initialization.
+"""Algorithm plugins (paper Sec. 5.3) — every trainer-level scheme is an
+:class:`repro.registry.AlgorithmSpec` registered here, so all of them see
+identical data/initialization through the same trainer machinery.
 
   CFA     — consensus FedAvg (Savazzi et al. [20]): datasize mixing weights,
             redundancy-blind (duplicates inflate a node's weight).
@@ -7,46 +8,55 @@ trainer machinery so every algorithm sees identical data/initialization.
             a fraction M of layers (paper compares at M=100%).
   CDFA    — D-PSGD (Lian et al. [7]): gossip average every SGD step.
   FedAvg  — centralized reference (not in the paper's tables; sanity).
+  Metropolis — beyond-paper: Metropolis-Hastings weights (doubly
+            stochastic, provably consensus-convergent on any connected
+            graph).
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.configs.base import FedConfig, TrainConfig
-from repro.core.cdfl import Trainer, make_trainer
+from repro.core import topology
+from repro.core.cdfl import Trainer, build_trainer
+from repro.registry import AlgorithmSpec, algorithms
 
 
-def cdfl(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
-    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="cdfl"),
-                        train, **kw)
+def _register(name: str, **replace_kw):
+    """Register the standard build_trainer-backed scheme ``name``; its
+    mixing rule comes from ``topology.ALGORITHM_MIXING`` (the one table
+    the static eta_fn and mobility stacks also share)."""
+
+    def make(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
+        return build_trainer(
+            loss_fn, dataclasses.replace(fed, algorithm=name, **replace_kw),
+            train, **kw)
+
+    algorithms.register(name, AlgorithmSpec(
+        name=name,
+        mixing=topology.ALGORITHM_MIXING[name],
+        uses_transport=name not in ("fedavg", "dpsgd"),
+        make=make))
+    return make
 
 
-def cfa(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
-    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="cfa"),
-                        train, **kw)
+cdfl = _register("cdfl")
+cfa = _register("cfa")
+dpsgd = _register("dpsgd")
+fedavg = _register("fedavg")
+metropolis = _register("metropolis")
 
 
 def cdfa_m(loss_fn, fed: FedConfig, train: TrainConfig,
            fraction: float = 1.0, **kw) -> Trainer:
     f = dataclasses.replace(fed, algorithm="cdfa_m", cdfa_fraction=fraction)
-    return make_trainer(loss_fn, f, train, **kw)
+    return build_trainer(loss_fn, f, train, **kw)
 
 
-def dpsgd(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
-    return make_trainer(loss_fn, dataclasses.replace(fed, algorithm="dpsgd"),
-                        train, **kw)
+algorithms.register("cdfa_m", AlgorithmSpec(
+    name="cdfa_m", mixing=topology.ALGORITHM_MIXING["cdfa_m"],
+    uses_transport=True, make=cdfa_m))
 
-
-def fedavg(loss_fn, fed: FedConfig, train: TrainConfig, **kw) -> Trainer:
-    return make_trainer(loss_fn,
-                        dataclasses.replace(fed, algorithm="fedavg"),
-                        train, **kw)
-
-
-ALGORITHMS = {
-    "cdfl": cdfl,
-    "cfa": cfa,
-    "cdfa_m": cdfa_m,
-    "dpsgd": dpsgd,
-    "fedavg": fedavg,
-}
+# Back-compat view of the pre-registry module dict (name -> constructor);
+# stays live as new algorithms register.
+ALGORITHMS = algorithms.view(lambda spec: spec.make)

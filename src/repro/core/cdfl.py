@@ -22,9 +22,16 @@ Two drivers:
 
 How the exchange moves between nodes is pluggable: both drivers route
 the flat-buffer mix through a ``repro.core.transport`` Transport (dense
-fused matmul, ring-sharded neighbor shift, or bounded-delay gossip; f32
-or bf16 wire format), selected by ``FedConfig.transport`` or passed
-explicitly to :func:`make_trainer`.
+fused matmul, ring-sharded neighbor shift, or bounded-delay gossip; any
+registered wire codec), selected by ``FedConfig.transport`` or passed
+explicitly to :func:`build_trainer`. The algorithm itself is a
+``repro.registry.algorithms`` plugin: its spec names the mixing policy
+the exchange uses and whether it routes through a transport at all.
+
+Batch sampling is keyed on the ABSOLUTE round index (``state.round``):
+round r's minibatch indices derive from ``fold_in(rng, r)`` regardless
+of how the run is segmented, so checkpoint/resume through the
+``repro.experiment`` Session reproduces an unsegmented run exactly.
 
 WHAT graph the exchange runs on may change every round: the scan driver
 consumes a precomputed ``(R, K, K)`` eta stack and ``(R,)`` gamma stack
@@ -37,12 +44,14 @@ so a link that dropped since the snapshot was taken contributes nothing.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import registry
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core import consensus, flatten, sketch, topology
 from repro.core import transport as transport_lib
@@ -82,25 +91,30 @@ def _node_sketches(node_items, fed: FedConfig):
     return ratios, totals
 
 
-def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
-                 eval_fn: Optional[Callable] = None,
-                 transport: Any = None) -> Trainer:
+def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
+                  eval_fn: Optional[Callable] = None,
+                  transport: Any = None) -> Trainer:
     """loss_fn(params, batch) -> scalar loss. batch leaves have no K dim
     (the trainer vmaps over nodes).
+
+    The non-deprecated trainer constructor — what the algorithm plugins
+    (``repro.core.baselines``) and the ``repro.experiment`` façade call.
+    ``fed.algorithm`` selects a registered
+    :class:`repro.registry.AlgorithmSpec`, whose ``mixing`` policy and
+    ``uses_transport`` flag drive the assembly below.
 
     ``transport``: a ``repro.core.transport`` instance overriding the one
     ``fed.transport``/``fed.wire_dtype``/``fed.staleness`` select.
     fedavg (centralized server average) and dpsgd (per-step leaf-wise
     gossip) bypass the transport; see ``mix_buf``/``round_body``.
     """
+    registry.ensure_plugins()
+    spec = registry.algorithms.get(fed.algorithm)
     adj = jnp.asarray(topology.adjacency(fed.topology, fed.num_nodes))
     if fed.algorithm == "fedavg":
         adj = jnp.asarray(topology.adjacency("full", fed.num_nodes))
-    uses_transport = fed.algorithm not in ("fedavg", "dpsgd")
-    try:
-        mix_rule = topology.ALGORITHM_MIXING[fed.algorithm]
-    except KeyError:
-        raise ValueError(f"unknown algorithm {fed.algorithm!r}") from None
+    uses_transport = spec.uses_transport
+    mix_rule = spec.mixing
     mobile = fed.mobility is not None and fed.mobility.kind != "static"
     if mobile and fed.algorithm == "fedavg":
         # fedavg is the centralized reference: a server average has no
@@ -273,12 +287,14 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
 
-    def mixing_stack(state: FedState, num_rounds: int):
+    def mixing_stack(state: FedState, num_rounds: int, start: int = 0):
         """Per-round mixing for the scan driver: ``(R, K, K)`` eta and
         ``(R,)`` gamma. Static topology broadcasts the one hoisted
         graph; a mobility scenario re-derives radio-range links every
         round (ring transport: gated to the physical ring — links the
-        transport cannot carry never appear)."""
+        transport cannot carry never appear). ``start`` offsets into the
+        kinematic trace: a run resumed at round r continues the SAME
+        trajectory, so a segmented run equals an unsegmented one."""
         from repro import mobility as mobility_lib
         if not mobile:
             eta, gamma = _mixing(state)
@@ -289,22 +305,26 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return mobility_lib.scenario_stacks(
             fed.mobility, num_rounds, fed.num_nodes, rule=mix_rule,
             gamma_cap=fed.gamma, ratios=state.ratios, sizes=state.sizes,
-            mask=mask)
+            mask=mask, start=start)
 
     @partial(jax.jit, static_argnames=("num_rounds", "max_items"),
              donate_argnums=(0,))
-    def _scan_rounds(state: FedState, data, rng: jax.Array,
+    def _scan_rounds(state: FedState, data, round_keys: jax.Array,
                      num_rounds: int, max_items: int, node_sizes,
                      etas, gammas):
-        # (R, K, S, B) minibatch indices for ALL rounds, sampled on device.
-        shape = (num_rounds, fed.num_nodes, fed.local_steps,
-                 train.batch_size)
+        # (R, K, S, B) minibatch indices for ALL rounds, sampled on
+        # device from per-round keys folded on the ABSOLUTE round index
+        # (run_rounds derives them) — segmenting a run cannot change
+        # which batches any round sees.
+        shape = (fed.num_nodes, fed.local_steps, train.batch_size)
         if node_sizes is None:
-            idx = jax.random.randint(rng, shape, 0, max_items)
+            idx = jax.vmap(
+                lambda k: jax.random.randint(k, shape, 0, max_items)
+            )(round_keys)
         else:
             # ragged per-node datasets (padded to a common N): uniform
             # over each node's true item count
-            u = jax.random.uniform(rng, shape)
+            u = jax.vmap(lambda k: jax.random.uniform(k, shape))(round_keys)
             idx = jnp.minimum(
                 (u * node_sizes[None, :, None, None]).astype(jnp.int32),
                 node_sizes.astype(jnp.int32)[None, :, None, None] - 1)
@@ -372,6 +392,12 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         donated — eliminating the per-round jit dispatch and host-numpy
         batch transfer the Python round loop pays.
 
+        Sampling and (under mobility) the per-round graphs are keyed on
+        the ABSOLUTE round index carried by ``state.round``: calling
+        this twice for 10 rounds each reproduces one 20-round call with
+        the same ``rng`` — the invariant the Session checkpoint/resume
+        path relies on.
+
         state: FedState (donated — do not reuse after the call).
         data:  pytree of node-stacked dataset arrays, leaves (K, N, ...),
                with the same keys ``loss_fn`` expects in a batch
@@ -395,8 +421,11 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         max_items = jax.tree.leaves(data)[0].shape[1]
         if n_items is not None:
             n_items = jnp.asarray(n_items)
+        start = int(state.round)
+        round_keys = jax.vmap(lambda r: jax.random.fold_in(rng, r))(
+            jnp.arange(start, start + num_rounds))
         if eta_stack is None:
-            etas, gammas = mixing_stack(state, num_rounds)
+            etas, gammas = mixing_stack(state, num_rounds, start=start)
             if gamma_stack is not None:
                 gammas = jnp.asarray(gamma_stack, jnp.float32)
         else:
@@ -412,8 +441,30 @@ def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         if gammas.shape != (num_rounds,):
             raise ValueError(f"gamma stack shape {gammas.shape} != "
                              f"{(num_rounds,)}")
-        return _scan_rounds(state, data, rng, num_rounds, max_items,
+        return _scan_rounds(state, data, round_keys, num_rounds, max_items,
                             n_items, etas, gammas)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
                    run_rounds=run_rounds, mixing_stack=mixing_stack)
+
+
+def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
+                 eval_fn: Optional[Callable] = None,
+                 transport: Any = None) -> Trainer:
+    """Deprecated alias for :func:`build_trainer`.
+
+    Prefer the declarative façade::
+
+        from repro.experiment import Experiment
+        session = Experiment.from_parts(loss_fn, init_params,
+                                        fed=fed, train=train).compile(...)
+
+    or :func:`build_trainer` for direct trainer access. Kept as a thin
+    shim so pre-registry call sites keep working unchanged.
+    """
+    warnings.warn(
+        "make_trainer is deprecated; use repro.experiment.Experiment "
+        "(declarative session API) or repro.core.cdfl.build_trainer",
+        DeprecationWarning, stacklevel=2)
+    return build_trainer(loss_fn, fed, train, eval_fn=eval_fn,
+                         transport=transport)

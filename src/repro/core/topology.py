@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.registry import mixing_policies
+
 
 def adjacency(kind: str, k: int, *, seed: int = 0,
               edge_prob: float = 0.5) -> np.ndarray:
@@ -81,9 +83,28 @@ def metropolis_mixing(adj: jnp.ndarray) -> jnp.ndarray:
     # neighbor part only; self weight handled by consensus step
 
 
+# Registered mixing policies (repro.registry.mixing_policies): the
+# plugin signature is ``rule(adj, *, ratios=None, sizes=None) -> eta``
+# so every policy composes with weighted mobility adjacencies and the
+# per-round vmapped stacks without special-casing which side input it
+# consumes.
+mixing_policies.register(
+    "cnd", lambda adj, *, ratios=None, sizes=None: cnd_mixing(adj, ratios))
+mixing_policies.register(
+    "datasize",
+    lambda adj, *, ratios=None, sizes=None: datasize_mixing(adj, sizes))
+mixing_policies.register(
+    "uniform", lambda adj, *, ratios=None, sizes=None: uniform_mixing(adj))
+mixing_policies.register(
+    "metropolis",
+    lambda adj, *, ratios=None, sizes=None: metropolis_mixing(adj))
+
+
 # Which mixing rule each algorithm's exchange uses (paper Sec. 5.3).
 # Shared by the trainer's static eta_fn and the mobility subsystem's
-# per-round stacks so the two paths can never diverge.
+# per-round stacks so the two paths can never diverge; the algorithm
+# registry (repro.core.baselines) reads its AlgorithmSpec.mixing from
+# this table.
 ALGORITHM_MIXING = {
     "cdfl": "cnd",
     "cfa": "datasize",
@@ -97,21 +118,13 @@ ALGORITHM_MIXING = {
 def mixing_weights(adj: jnp.ndarray, rule: str,
                    ratios: jnp.ndarray | None = None,
                    sizes: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Dispatch to the selected mixing rule on ONE (possibly weighted)
-    (K, K) adjacency. Weighted adjacencies (mobility link quality)
-    compose naturally: every rule multiplies its per-neighbor weight by
-    the link weight before row-normalizing, and rows with no neighbors
-    come out all-zero (pure self-update) rather than NaN."""
-    if rule == "cnd":
-        return cnd_mixing(adj, ratios)
-    if rule == "datasize":
-        return datasize_mixing(adj, sizes)
-    if rule == "uniform":
-        return uniform_mixing(adj)
-    if rule == "metropolis":
-        return metropolis_mixing(adj)
-    raise ValueError(f"unknown mixing rule {rule!r} "
-                     f"(choose from cnd|datasize|uniform|metropolis)")
+    """Dispatch to the selected mixing policy (a
+    ``repro.registry.mixing_policies`` plugin) on ONE (possibly
+    weighted) (K, K) adjacency. Weighted adjacencies (mobility link
+    quality) compose naturally: every rule multiplies its per-neighbor
+    weight by the link weight before row-normalizing, and rows with no
+    neighbors come out all-zero (pure self-update) rather than NaN."""
+    return mixing_policies.get(rule)(adj, ratios=ratios, sizes=sizes)
 
 
 def max_row_sum(eta: jnp.ndarray) -> jnp.ndarray:

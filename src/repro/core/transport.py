@@ -3,18 +3,19 @@
 The paper's eq. 5 exchange is the only part of C-DFL that touches the
 network. Everything upstream (CND weights, local Adam, the scan driver)
 is transport-agnostic once params live in the flat ``(K, P)`` buffer
-(repro.core.flatten), so the three comms-scaling directions — bf16 wire
-format, ring-sharded collectives, bounded-delay async gossip — are all
-implementations of ONE protocol:
+(repro.core.flatten), so the three comms-scaling directions — compressed
+wire formats, ring-sharded collectives, bounded-delay async gossip — are
+all implementations of ONE protocol:
 
     state        = transport.init_state(buf)
     buf', state' = transport.exchange(buf, eta, gamma, state, rnd)
 
+Transports are **plugins**: ``repro.registry.transports`` maps a name to
+a ``fed -> Transport`` factory, and :func:`make_transport` is nothing
+but that lookup. The built-ins:
+
 * :class:`DenseTransport` — the fused ``(K,K)@(K,P)`` mix (XLA einsum or
-  the Pallas ``flat_mix`` kernel on TPU). ``wire_dtype="bf16"`` casts
-  the exchanged buffer to bf16 (halves consensus bytes) while ``buf``
-  stays the f32 master copy; delta-form mixing means the wire precision
-  only touches the neighbor *differences*, which vanish at consensus.
+  the Pallas ``flat_mix`` kernel on TPU).
 * :class:`RingShardTransport` — neighbor exchange restricted to the ring
   ``{k-1, k+1}``: two shifted copies of the wire buffer instead of a
   dense matmul. In simulation (node-stacked buffer) the shift is
@@ -22,10 +23,21 @@ implementations of ONE protocol:
   it is ONE ``lax.ppermute`` per direction per round on the flat vector
   (see :func:`ring_exchange_shard`) — the seed path issued one per leaf.
 * :class:`GossipTransport` — bounded-delay (stale-neighbor) exchange:
-  neighbors read a snapshot of the buffer ``staleness`` rounds old,
-  kept in a circular double buffer inside the transport state.
+  neighbors read a snapshot of the buffer ``staleness`` rounds old, kept
+  in a circular double buffer inside the transport state.
   ``staleness=0`` bypasses the state and reproduces synchronous C-DFL
   bit-exactly (mobility/async-DFL comparisons, arXiv:2503.06443).
+
+What travels the wire is a second, orthogonal plugin axis: a
+:class:`WireCodec` (``repro.registry.wire_codecs``) encodes the f32
+master buffer into its wire representation and decodes what a receiver
+reconstructs. ``bf16`` (halves consensus bytes; delta-form mixing keeps
+the wire precision on the neighbor *differences*, which vanish at
+consensus) is just the first registered codec — an int8+per-column-scales
+codec plugs in WITHOUT touching any transport, because every transport
+routes its wire traffic through ``codec.encode``/``codec.decode``. A
+codec may return a pytree from ``encode`` (e.g. values + scales); every
+leaf must keep the node axis leading so neighbor shifts apply leaf-wise.
 
 Transports are frozen dataclasses (hashable, jit-static); their state is
 a pytree that rides the trainer's scan carry.
@@ -39,24 +51,99 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import flatten
+from repro.registry import transports, wire_codecs
 
-WIRE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+# --------------------------------------------------------------------------
+# Wire codecs: the buffer's on-the-wire representation.
+# --------------------------------------------------------------------------
+
+class WireCodec:
+    """f32 flat buffer <-> wire representation.
+
+    ``encode(buf)`` returns the wire pytree (every leaf with the node
+    axis leading); ``decode(wire, dtype)`` reconstructs the buffer as
+    the receiver sees it. ``cast_dtype`` advertises that ``encode`` is a
+    pure dtype cast — transports with a fused mix kernel may then feed
+    the encoded array straight into the kernel (which upcasts in VMEM)
+    instead of decode()ing first. Codecs with side information (scales,
+    sparsity masks) leave it ``None``.
+    """
+
+    name: str = "?"
+    cast_dtype = None            # non-None => encode is astype(cast_dtype)
+
+    def encode(self, buf: jax.Array):
+        raise NotImplementedError
+
+    def decode(self, wire, dtype=jnp.float32) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bytes(self, layout: flatten.FlatLayout) -> int:
+        """Bytes one node sends over one link per round."""
+        raise NotImplementedError
+
+    def roundtrip(self, buf: jax.Array) -> jax.Array:
+        """``buf`` as it survives the wire, back in ``buf``'s dtype."""
+        return self.decode(self.encode(buf), buf.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class CastCodec(WireCodec):
+    """Pure-dtype-cast codec: encode is ``astype``, decode is the upcast
+    back. ``f32`` (identity) and ``bf16`` are the registered instances."""
+
+    name: str = "f32"
+    dtype: Any = jnp.float32
+
+    @property
+    def cast_dtype(self):
+        return self.dtype
+
+    def encode(self, buf: jax.Array) -> jax.Array:
+        return buf.astype(self.dtype)
+
+    def decode(self, wire, dtype=jnp.float32) -> jax.Array:
+        return wire.astype(dtype)
+
+    def wire_bytes(self, layout: flatten.FlatLayout) -> int:
+        return layout.padded * jnp.dtype(self.dtype).itemsize
+
+
+wire_codecs.register("f32", CastCodec("f32", jnp.float32))
+wire_codecs.register("bf16", CastCodec("bf16", jnp.bfloat16))
+
+# Back-compat view of the pre-registry module dict (name -> jnp dtype;
+# None for codecs that are not a pure cast).
+WIRE_DTYPES = wire_codecs.view(lambda c: c.cast_dtype)
+
+
+def wire_codec(name: str) -> WireCodec:
+    """Look up a registered :class:`WireCodec` (listing names on miss)."""
+    return wire_codecs.get(name)
 
 
 def _wire_dtype(name: str):
-    try:
-        return WIRE_DTYPES[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown wire dtype {name!r} (choose from "
-            f"{sorted(WIRE_DTYPES)})") from None
+    """Legacy helper: the jnp dtype of a pure-cast codec."""
+    codec = wire_codec(name)
+    if codec.cast_dtype is None:
+        raise ValueError(f"wire codec {name!r} is not a pure dtype cast")
+    return codec.cast_dtype
 
+
+# --------------------------------------------------------------------------
+# Transports.
+# --------------------------------------------------------------------------
 
 class _FlatTransport:
-    """Shared transport behavior: one full wire-dtype buffer per link
+    """Shared transport behavior: one full wire-codec payload per link
     per round, and no state unless a subclass says otherwise."""
 
     wire_dtype: str = "f32"
+
+    @property
+    def codec(self) -> WireCodec:
+        return wire_codec(self.wire_dtype)
 
     @property
     def stateful(self) -> bool:
@@ -68,7 +155,18 @@ class _FlatTransport:
 
     def wire_bytes(self, layout: flatten.FlatLayout) -> int:
         """Bytes one node sends over one link per round."""
-        return layout.padded * _wire_dtype(self.wire_dtype).dtype.itemsize
+        return self.codec.wire_bytes(layout)
+
+
+def _fused_wire(codec: WireCodec, buf: jax.Array):
+    """The ``wire`` argument for :func:`flatten.mix_flat`: ``None`` for
+    the identity codec, the raw cast for pure-cast codecs (the fused
+    kernel upcasts in VMEM), the decoded roundtrip otherwise."""
+    if codec.cast_dtype is not None:
+        if jnp.dtype(codec.cast_dtype) == buf.dtype:
+            return None
+        return codec.encode(buf)
+    return codec.roundtrip(buf)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,9 +178,7 @@ class DenseTransport(_FlatTransport):
     use_kernel: bool | None = None      # None -> auto (TPU)
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None):
-        wire = None
-        if self.wire_dtype != "f32":
-            wire = buf.astype(_wire_dtype(self.wire_dtype))
+        wire = _fused_wire(self.codec, buf)
         out = flatten.mix_flat(buf, eta, gamma, use_kernel=self.use_kernel,
                                wire=wire)
         return out, state
@@ -111,10 +207,15 @@ class RingShardTransport(_FlatTransport):
         eta32 = eta.astype(buf.dtype)
         ep = eta32[idx, (idx - 1) % k][:, None]     # weight for k-1
         en = eta32[idx, (idx + 1) % k][:, None]     # weight for k+1
-        wire = buf.astype(_wire_dtype(self.wire_dtype))
-        w_self = wire.astype(buf.dtype)
-        w_prev = jnp.roll(wire, 1, axis=0).astype(buf.dtype)    # from k-1
-        w_next = jnp.roll(wire, -1, axis=0).astype(buf.dtype)   # from k+1
+        codec = self.codec
+        enc = codec.encode(buf)
+        # neighbor shifts apply to the ENCODED payload leaf-wise (side
+        # information such as per-node scales shifts with its values)
+        w_self = codec.decode(enc, buf.dtype)
+        w_prev = codec.decode(
+            jax.tree.map(lambda a: jnp.roll(a, 1, axis=0), enc), buf.dtype)
+        w_next = codec.decode(
+            jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), enc), buf.dtype)
         g = jnp.asarray(gamma, buf.dtype)
         out = buf + g * (ep * (w_prev - w_self) + en * (w_next - w_self))
         return out, state
@@ -123,9 +224,10 @@ class RingShardTransport(_FlatTransport):
 @dataclasses.dataclass(frozen=True)
 class GossipTransport(_FlatTransport):
     """Bounded-delay gossip: neighbor terms read a buffer snapshot
-    ``staleness`` rounds old (a circular buffer of snapshots in the
-    transport state, stored at wire precision). ``staleness=0`` is
-    stateless and bit-identical to :class:`DenseTransport`."""
+    ``staleness`` rounds old (a circular buffer of ENCODED snapshots in
+    the transport state — stored at wire size, whatever the codec).
+    ``staleness=0`` is stateless and bit-identical to
+    :class:`DenseTransport`."""
 
     staleness: int = 0
     wire_dtype: str = "f32"
@@ -137,59 +239,77 @@ class GossipTransport(_FlatTransport):
     def init_state(self, buf: jax.Array) -> Any:
         if self.staleness == 0:
             return ()
-        snap = buf.astype(_wire_dtype(self.wire_dtype))
-        return jnp.broadcast_to(
-            snap[None], (self.staleness,) + snap.shape).copy()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (self.staleness,) + a.shape).copy(),
+            self.codec.encode(buf))
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None):
-        dt = _wire_dtype(self.wire_dtype)
+        codec = self.codec
         if self.staleness == 0:
-            wire = None if self.wire_dtype == "f32" else buf.astype(dt)
-            return flatten.mix_flat(buf, eta, gamma, wire=wire), state
+            return flatten.mix_flat(buf, eta, gamma,
+                                    wire=_fused_wire(codec, buf)), state
         if rnd is None:
             raise ValueError("stale gossip needs the round index (rnd)")
         # slot r % s was last written at round r - s: exactly s rounds old
         slot = jnp.mod(jnp.asarray(rnd, jnp.int32), self.staleness)
-        stale = jax.lax.dynamic_index_in_dim(state, slot, 0,
-                                             keepdims=False)
-        new_state = jax.lax.dynamic_update_index_in_dim(
-            state, buf.astype(dt)[None], slot, 0)
+        stale_enc = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0,
+                                                   keepdims=False), state)
+        new_state = jax.tree.map(
+            lambda a, fresh: jax.lax.dynamic_update_index_in_dim(
+                a, fresh[None], slot, 0),
+            state, codec.encode(buf))
         eta32 = eta.astype(buf.dtype)
         row = eta32.sum(axis=1)
         g = jnp.asarray(gamma, buf.dtype)
         # neighbor terms from the stale snapshot, self term from the
         # CURRENT buffer at wire precision (so staleness->0 recovers the
         # synchronous delta form term by term)
-        mixed = jnp.einsum("ki,ip->kp", eta32, stale.astype(buf.dtype))
-        w_self = buf.astype(dt).astype(buf.dtype)
+        stale = codec.decode(stale_enc, buf.dtype)
+        mixed = jnp.einsum("ki,ip->kp", eta32, stale)
+        w_self = codec.roundtrip(buf)
         out = buf + g * (mixed - row[:, None] * w_self)
         return out, new_state
 
 
-TRANSPORTS = ("dense", "ring", "gossip")
+# --------------------------------------------------------------------------
+# Registration + config factory.
+# --------------------------------------------------------------------------
+
+@transports.register("dense")
+def _make_dense(fed) -> DenseTransport:
+    return DenseTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"))
+
+
+@transports.register("ring")
+def _make_ring(fed) -> RingShardTransport:
+    if fed.num_nodes < 3:
+        raise ValueError("ring transport needs num_nodes >= 3")
+    if fed.topology != "ring":
+        raise ValueError(
+            f"ring transport moves data only between ring neighbors; "
+            f"topology={fed.topology!r} needs the dense transport")
+    return RingShardTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"))
+
+
+@transports.register("gossip")
+def _make_gossip(fed) -> GossipTransport:
+    return GossipTransport(staleness=getattr(fed, "staleness", 0),
+                           wire_dtype=getattr(fed, "wire_dtype", "f32"))
+
+
+# Back-compat view of the pre-registry tuple (iterates names).
+TRANSPORTS = transports.view()
 
 
 def make_transport(fed) -> Any:
     """Build the transport a :class:`repro.configs.base.FedConfig` asks
-    for (``fed.transport`` / ``fed.wire_dtype`` / ``fed.staleness``)."""
-    kind = getattr(fed, "transport", "dense")
-    wire = getattr(fed, "wire_dtype", "f32")
-    _wire_dtype(wire)                             # validate early
-    if kind == "dense":
-        return DenseTransport(wire_dtype=wire)
-    if kind == "ring":
-        if fed.num_nodes < 3:
-            raise ValueError("ring transport needs num_nodes >= 3")
-        if fed.topology != "ring":
-            raise ValueError(
-                f"ring transport moves data only between ring neighbors; "
-                f"topology={fed.topology!r} needs the dense transport")
-        return RingShardTransport(wire_dtype=wire)
-    if kind == "gossip":
-        return GossipTransport(staleness=getattr(fed, "staleness", 0),
-                               wire_dtype=wire)
-    raise ValueError(
-        f"unknown transport {kind!r} (choose from {TRANSPORTS})")
+    for — a pure ``repro.registry.transports`` lookup; registering a new
+    transport factory makes it constructible here (and selectable from
+    the CLI) with no edits."""
+    wire_codec(getattr(fed, "wire_dtype", "f32"))     # validate early
+    return transports.get(getattr(fed, "transport", "dense"))(fed)
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +329,10 @@ def ring_exchange_shard(vec: jax.Array, eta_prev: jax.Array,
     collective-permute pairs, so the Pallas/VPU mix of chunk j overlaps
     the transfer of chunk j+1. ``shards=1`` degenerates to ONE ppermute
     per direction per round (vs. one per pytree leaf in the seed path).
+
+    The mesh path currently supports pure-cast wire codecs (the chunked
+    ppermute moves one array per chunk; codecs with side information
+    need a packed representation — see ROADMAP).
 
     ``perms``: optional precomputed (fwd, bwd) (src, dst) pairs from
     :func:`repro.launch.mesh.fed_ring_perms`; derived from the axis

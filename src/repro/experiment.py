@@ -1,0 +1,420 @@
+"""Declarative experiment/session API — the user-facing façade over the
+C-DFL machinery.
+
+Instead of hand-wiring ``make_trainer`` + ``trainer.init`` +
+``run_rounds(eval_fn=..., n_items=...)`` in every caller, an experiment
+is declared once and compiled into a resumable session::
+
+    exp = Experiment.from_parts(loss_fn, init_params,
+                                fed=FedConfig(num_nodes=4, local_steps=10),
+                                train=TrainConfig(learning_rate=1e-3))
+    session = exp.compile(data, node_items)
+    result = session.run(60, callbacks=[EvalCallback(eval_fn),
+                                        CheckpointCallback("ckpt", every=20)])
+    result.metrics["loss"]          # (R, K) stacked per-round metrics
+    result.final_params             # node-stacked pytree
+
+    session2 = exp.compile(data, node_items).resume("ckpt")
+    session2.run(40)                # rounds 60..99 of the SAME run
+
+Every plugin name in the configs (transport, wire codec, mixing policy,
+mobility trace, algorithm) resolves through ``repro.registry`` — a newly
+registered plugin is immediately constructible here.
+
+Design constraints the façade honors:
+
+* **No per-round dispatch overhead.** ``Session.run`` issues ONE
+  ``Trainer.run_rounds`` scan per host-callback segment; with no
+  periodic callbacks that is one scan for the whole run, identical to
+  calling the trainer directly (the ``cdfl_*rounds_scan_flat`` bench row
+  is emitted through this path). The trainer is compiled once per
+  Experiment and shared by every Session it compiles, so jit caches are
+  reused across sessions.
+* **Segmentation invariance.** Batch sampling and mobility graphs are
+  keyed on the ABSOLUTE round index (``FedState.round``), so
+  run(10) + checkpoint + resume + run(10) reproduces run(20) exactly —
+  per transport, per mobility scenario.
+* **Callbacks subsume the ad-hoc kwargs.** Per-round eval rides the
+  scan as a device-side metric (:class:`EvalCallback`); host-side hooks
+  (:class:`CheckpointCallback`, :class:`ChurnLogCallback`) fire on
+  segment boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import registry
+from repro.checkpointing import restore as _ckpt_restore
+from repro.checkpointing import save as _ckpt_save
+from repro.configs.base import FedConfig, RunConfig, TrainConfig
+from repro.core.cdfl import FedState, Trainer, build_trainer
+
+__all__ = [
+    "Experiment", "Session", "RunResult",
+    "Callback", "EvalCallback", "CheckpointCallback", "ChurnLogCallback",
+]
+
+
+# --------------------------------------------------------------------------
+# Callbacks.
+# --------------------------------------------------------------------------
+
+class Callback:
+    """Per-round hook riding a :meth:`Session.run`.
+
+    ``every=N`` makes the run segment its scan at every N rounds and
+    call :meth:`on_rounds` there (host-side work: checkpoints, logs);
+    ``every=None`` keeps the whole run in one scan. Device-side
+    per-round metrics (eval) are declared via :attr:`eval_fn` instead —
+    they ride the scan and cost no extra dispatch.
+    """
+
+    every: Optional[int] = None
+    eval_fn: Optional[Callable] = None   # params -> metric, vmapped over K
+
+    def on_run_start(self, session: "Session", rounds: int) -> None:
+        pass
+
+    def on_rounds(self, session: "Session", end_round: int) -> None:
+        """Called after the scan segment ending at ``end_round`` (an
+        absolute round index, multiples of ``every``)."""
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        pass
+
+
+class EvalCallback(Callback):
+    """Per-round evaluation as a device-side scan metric: the stacked
+    ``(R, K)`` values appear under ``result.metrics[name]`` with no
+    per-round host sync (subsumes the old ``make_trainer(eval_fn=...)``
+    kwarg)."""
+
+    def __init__(self, eval_fn: Callable, name: str = "eval"):
+        self.eval_fn = eval_fn
+        self.name = name
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        # the trainer stacks the metric under its internal "eval" key;
+        # honor the caller's name
+        if self.name != "eval" and "eval" in result.metrics:
+            result.metrics[self.name] = result.metrics.pop("eval")
+
+
+class CheckpointCallback(Callback):
+    """Save the session state every ``every`` rounds (and at run end)
+    to ``path`` — the artifact :meth:`Session.resume` restarts from."""
+
+    def __init__(self, path: str, every: Optional[int] = None):
+        self.path = path
+        self.every = every
+
+    def on_rounds(self, session: "Session", end_round: int) -> None:
+        session.save(self.path)
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        session.save(self.path)
+
+
+class ChurnLogCallback(Callback):
+    """Log the mobility scenario's link-churn summary for the rounds
+    this run will cover (no-op on static topologies)."""
+
+    def __init__(self, print_fn: Callable[[str], None] = print):
+        self.print_fn = print_fn
+
+    def on_run_start(self, session: "Session", rounds: int) -> None:
+        fed = session.experiment.fed
+        mob = fed.mobility
+        if mob is None or mob.kind == "static":
+            return
+        from repro import mobility as mobility_lib
+        from repro.core import topology
+        # report the graph the run actually uses: the ring transport
+        # gates radio links to the physical ring
+        mask = (topology.adjacency("ring", fed.num_nodes)
+                if fed.transport == "ring" else None)
+        stats = mobility_lib.handover_stats(mobility_lib.adjacency_stack(
+            mob, rounds, fed.num_nodes, mask=mask,
+            start=session.rounds_completed))
+        self.print_fn(
+            f"mobility={mob.kind} range={mob.radio_range:.0f}m "
+            f"speed={mob.speed:.0f}m/s: "
+            f"{stats['links_per_round']:.1f} links/round, "
+            f"churn={stats['churn_rate']:.3f}, "
+            f"{stats['handovers']} handovers, "
+            f"{stats['partitioned_rounds']}/{stats['rounds']} "
+            f"partitioned rounds")
+
+
+# --------------------------------------------------------------------------
+# RunResult.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    """What one :meth:`Session.run` produced: the resumable final state,
+    every per-round metric stacked along a leading (rounds,) axis, and
+    wall time."""
+
+    state: FedState
+    metrics: Dict[str, jax.Array]
+    rounds: int
+    wall_time_s: float
+
+    @property
+    def final_params(self):
+        """Node-stacked params pytree after the last round."""
+        return self.state.params
+
+
+# --------------------------------------------------------------------------
+# Experiment.
+# --------------------------------------------------------------------------
+
+class Experiment:
+    """A declared C-DFL experiment: configs + model functions.
+
+    ``Experiment(run_config)`` derives the token-LM loss/init from
+    ``run_config.model`` (a ``ModelConfig``); :meth:`from_parts` wires
+    explicit ``loss_fn(params, batch)`` / ``init_params(rng)`` functions
+    (the paper's MLP/VGG models, custom research models).
+
+    The trainer is built lazily, once per distinct eval function, and
+    shared by every :class:`Session` this experiment compiles — so
+    repeated ``compile()`` calls (benchmark reps, sweeps over datasets)
+    reuse one jit cache.
+    """
+
+    def __init__(self, config: Optional[RunConfig] = None, *,
+                 fed: Optional[FedConfig] = None,
+                 train: Optional[TrainConfig] = None,
+                 model: Any = None,
+                 loss_fn: Optional[Callable] = None,
+                 init_params: Optional[Callable] = None,
+                 eval_fn: Optional[Callable] = None,
+                 transport: Any = None):
+        if config is None:
+            config = RunConfig(model=model, fed=fed or FedConfig(),
+                               train=train or TrainConfig())
+        elif fed is not None or train is not None or model is not None:
+            raise ValueError("pass EITHER a RunConfig or fed/train/model "
+                             "parts, not both")
+        self.config = config
+        self.loss_fn = loss_fn
+        self.init_params = init_params
+        self.eval_fn = eval_fn
+        self.transport = transport
+        self._trainers: dict[Any, Trainer] = {}
+        registry.ensure_plugins()
+
+    @classmethod
+    def from_parts(cls, loss_fn: Callable, init_params: Callable, *,
+                   fed: Optional[FedConfig] = None,
+                   train: Optional[TrainConfig] = None,
+                   model: Any = None,
+                   eval_fn: Optional[Callable] = None,
+                   transport: Any = None) -> "Experiment":
+        """Declare an experiment from explicit model functions:
+        ``loss_fn(params, batch) -> scalar`` (no K dim — the trainer
+        vmaps over nodes) and ``init_params(rng) -> params``."""
+        return cls(fed=fed, train=train, model=model, loss_fn=loss_fn,
+                   init_params=init_params, eval_fn=eval_fn,
+                   transport=transport)
+
+    # -- convenience views --------------------------------------------------
+    @property
+    def fed(self) -> FedConfig:
+        return self.config.fed
+
+    @property
+    def train(self) -> TrainConfig:
+        return self.config.train
+
+    # -- model derivation ---------------------------------------------------
+    def _model_fns(self, data) -> tuple[Callable, Callable]:
+        """(loss_fn, init_params) — explicit ones, or the token-LM pair
+        derived from ``config.model`` (group size from the data's
+        sequence length, as launch/train.py hand-wired before)."""
+        if self.loss_fn is not None:
+            if self.init_params is None:
+                raise ValueError("loss_fn given without init_params")
+            return self.loss_fn, self.init_params
+        cfg = self.config.model
+        if cfg is None or not hasattr(cfg, "vocab_size"):
+            raise ValueError(
+                "Experiment needs either loss_fn/init_params "
+                "(Experiment.from_parts) or a ModelConfig on "
+                "RunConfig.model to derive the token-LM loss from")
+        from repro.models import transformer
+        seq = jax.tree.leaves(data)[0].shape[-1]
+        group = self.train.batch_size * seq
+
+        def loss_fn(params, batch):
+            return transformer.loss_fn(params, cfg, batch,
+                                       group_size=group)
+
+        return loss_fn, (lambda r: transformer.init_params(r, cfg))
+
+    def trainer(self, data, eval_fn: Optional[Callable] = None) -> Trainer:
+        """The compiled trainer for this experiment, cached per eval
+        function (the one thing that changes the scanned metrics graph)
+        and — for model-derived losses, whose normalization captures the
+        sequence length — per data shape. The cache is bounded: a sweep
+        passing a fresh eval lambda per run re-jits but cannot grow
+        memory without limit."""
+        eval_fn = eval_fn if eval_fn is not None else self.eval_fn
+        key = (eval_fn, None if self.loss_fn is not None
+               else jax.tree.leaves(data)[0].shape[-1])
+        if key not in self._trainers:
+            if len(self._trainers) >= 8:          # evict oldest jit caches
+                self._trainers.pop(next(iter(self._trainers)))
+            loss_fn, _ = self._model_fns(data)
+            self._trainers[key] = build_trainer(
+                loss_fn, self.fed, self.train, eval_fn=eval_fn,
+                transport=self.transport)
+        return self._trainers[key]
+
+    # -- compile ------------------------------------------------------------
+    def compile(self, data, node_items, *,
+                rng: Optional[jax.Array] = None,
+                sample_rng: Optional[jax.Array] = None,
+                n_items=None, same_init: bool = True) -> "Session":
+        """Build a live :class:`Session`: trainer + device-resident data
+        + initialized :class:`FedState`.
+
+        data:       pytree of node-stacked dataset arrays, leaves
+                    (K, N, ...), keyed as ``loss_fn`` expects a batch.
+        node_items: (K, n, f) int feature tokens per node — the CND
+                    sketches (eqs. 6-7 weights) are built from these.
+        rng:        params/init key (default ``PRNGKey(train.seed)``).
+        sample_rng: base key for batch sampling across ALL rounds
+                    (default ``PRNGKey(train.seed + 1)``, the
+                    ``run_rounds`` default); per-round keys are folded
+                    from it on the absolute round index.
+        n_items:    optional (K,) true per-node item counts when the
+                    resident arrays are padded to a common N (ragged
+                    nodes, e.g. after CND dedup).
+        """
+        if rng is None:
+            rng = jax.random.PRNGKey(self.train.seed)
+        data = jax.tree.map(jnp.asarray, data)
+        trainer = self.trainer(data)
+        _, init_params = self._model_fns(data)
+        state = trainer.init(rng, init_params, jnp.asarray(node_items),
+                             same_init=same_init)
+        return Session(self, data, state, n_items=n_items,
+                       sample_rng=sample_rng)
+
+
+# --------------------------------------------------------------------------
+# Session.
+# --------------------------------------------------------------------------
+
+class Session:
+    """A compiled, resumable run: live :class:`FedState` + resident data
+    + the experiment's shared trainer. Not constructed directly — use
+    :meth:`Experiment.compile`."""
+
+    def __init__(self, experiment: Experiment, data, state: FedState, *,
+                 n_items=None, sample_rng: Optional[jax.Array] = None):
+        self.experiment = experiment
+        self.data = data
+        self._state = state
+        self._n_items = None if n_items is None else jnp.asarray(n_items)
+        self._rng = (jax.random.PRNGKey(experiment.train.seed + 1)
+                     if sample_rng is None else sample_rng)
+
+    @property
+    def state(self) -> FedState:
+        """The live federated state (params/opt/CND ratios/round/
+        transport state). Donated to each scan — snapshot via
+        :meth:`save` rather than holding references across runs."""
+        return self._state
+
+    @property
+    def rounds_completed(self) -> int:
+        return int(self._state.round)
+
+    # -- running ------------------------------------------------------------
+    def run(self, rounds: int, callbacks: Sequence[Callback] = (),
+            rng: Optional[jax.Array] = None) -> RunResult:
+        """Advance the session ``rounds`` federated rounds.
+
+        With no periodic (``every=N``) callbacks this is ONE
+        device-resident ``run_rounds`` scan — the façade adds no
+        per-round dispatch. Periodic callbacks split the run into
+        boundary-aligned scan segments; metrics are re-stacked across
+        segments so the result is indistinguishable from one scan.
+        """
+        if rounds <= 0:
+            raise ValueError(f"rounds must be positive, got {rounds}")
+        callbacks = list(callbacks)
+        eval_fns = [cb.eval_fn for cb in callbacks
+                    if cb.eval_fn is not None]
+        if len(eval_fns) > 1:
+            raise ValueError("at most one EvalCallback per run")
+        trainer = self.experiment.trainer(
+            self.data, eval_fn=eval_fns[0] if eval_fns else None)
+        rng = self._rng if rng is None else rng
+
+        marks = {rounds}
+        for cb in callbacks:
+            if cb.every:
+                marks.update(range(cb.every, rounds + 1, cb.every))
+        for cb in callbacks:
+            cb.on_run_start(self, rounds)
+
+        t0 = time.time()
+        start = self.rounds_completed
+        parts = []
+        prev = 0
+        for mark in sorted(marks):
+            self._state, metrics = trainer.run_rounds(
+                self._state, self.data, mark - prev, rng=rng,
+                n_items=self._n_items)
+            parts.append(metrics)
+            prev = mark
+            for cb in callbacks:
+                if cb.every and mark % cb.every == 0 and mark < rounds:
+                    cb.on_rounds(self, start + mark)
+        metrics = (parts[0] if len(parts) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts))
+        jax.block_until_ready(self._state.params)
+        result = RunResult(state=self._state, metrics=metrics,
+                           rounds=rounds, wall_time_s=time.time() - t0)
+        for cb in callbacks:
+            cb.on_run_end(self, result)
+        return result
+
+    # -- checkpoint / resume -------------------------------------------------
+    def save(self, path: str) -> str:
+        """Checkpoint the FULL resumable state (params, optimizer, CND
+        ratios/sizes, round counter, transport state) to ``path``."""
+        _ckpt_save(path, self._state, step=self.rounds_completed)
+        return path
+
+    def resume(self, path: str) -> "Session":
+        """Restore a checkpoint written by :meth:`save` (or a
+        :class:`CheckpointCallback`) into this session and continue the
+        SAME run: the restored round counter keys batch sampling and the
+        mobility trace, so resumed rounds reproduce an unsegmented run
+        exactly. Returns ``self`` for chaining."""
+        self._state = _ckpt_restore(path, self._state)
+        return self
+
+
+# --------------------------------------------------------------------------
+# Legacy bridge.
+# --------------------------------------------------------------------------
+
+def run_experiment(config: RunConfig, data, node_items, rounds: int,
+                   **compile_kw) -> RunResult:
+    """One-call convenience: declare, compile, run."""
+    return Experiment(config).compile(data, node_items,
+                                      **compile_kw).run(rounds)

@@ -210,14 +210,15 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="layer-scan mode (fast compile; roofline flops "
                          "undercount loop bodies — lowering check only)")
-    ap.add_argument("--transport", choices=transport_lib.TRANSPORTS,
+    from repro.registry import transports, wire_codecs
+    ap.add_argument("--transport", choices=transports.names(),
                     default="dense",
                     help="consensus transport backend priced into the "
                          "collective roofline term (train shapes)")
     ap.add_argument("--wire-dtype",
-                    choices=sorted(transport_lib.WIRE_DTYPES),
+                    choices=wire_codecs.names(),
                     default="f32",
-                    help="exchanged-buffer wire format for the "
+                    help="exchanged-buffer wire codec for the "
                          "collective term (bf16 halves consensus bytes)")
     args = ap.parse_args()
 

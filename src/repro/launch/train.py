@@ -4,12 +4,19 @@ Runs the C-DFL round loop (consensus + local Adam) for a selected
 architecture at a REDUCED size on synthetic token-LM data — the runnable
 counterpart of the dry-run (which exercises the full configs abstractly).
 
+Declared through the ``repro.experiment`` API: the CLI builds ONE
+``RunConfig``, ``Experiment(config).compile(...)`` assembles the trainer
+from the registered plugins, and every plugin-name flag's choices are
+derived from ``repro.registry`` — registering a new transport, wire
+codec, mobility trace or algorithm makes it selectable here with no
+edits to this file.
+
 Two drivers:
   * ``--driver scan`` (default) — device-resident multi-round scan
-    (``Trainer.run_rounds``): datasets live on device, per-round batch
-    indices are pre-sampled with ``jax.random``, and all rounds run under
-    one ``jax.lax.scan`` with donated state. Metrics are printed after
-    the run from the stacked per-round arrays.
+    (``Session.run``): datasets live on device, per-round batch indices
+    are pre-sampled with ``jax.random``, and all rounds run under one
+    ``jax.lax.scan`` with donated state. Metrics are printed after the
+    run from the stacked per-round arrays.
   * ``--driver loop`` — the legacy per-round Python loop (host-numpy
     batching + one jit dispatch per round); kept for debugging and as the
     benchmark baseline.
@@ -26,14 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import mobility as mobility_lib
+from repro import registry
 from repro.checkpointing import save
-from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
+from repro.configs.base import (FedConfig, MobilityConfig, RunConfig,
+                                TrainConfig)
 from repro.configs.registry import ARCHS, get_smoke_arch
-from repro.core import baselines
-from repro.core import transport as transport_lib
 from repro.data import pipeline, redundancy, synthetic
-from repro.models import transformer
+from repro.experiment import ChurnLogCallback, Experiment
+from repro.mobility.links import LINK_QUALITIES
 
 
 def _print_round(r, loss, disagree, dt):
@@ -42,12 +49,13 @@ def _print_round(r, loss, disagree, dt):
 
 
 def main() -> None:
+    registry.ensure_plugins()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-1.7b")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--algorithm", default="cdfl",
-                    choices=sorted(baselines.ALGORITHMS))
+                    choices=registry.algorithms.names())
     ap.add_argument("--redundancy", type=float, default=0.5,
                     help="fraction of duplicated items per node")
     ap.add_argument("--batch", type=int, default=8)
@@ -57,20 +65,18 @@ def main() -> None:
     ap.add_argument("--driver", choices=("scan", "loop"), default="scan",
                     help="scan: single-dispatch device-resident rounds; "
                          "loop: legacy per-round host loop")
-    ap.add_argument("--transport", choices=transport_lib.TRANSPORTS,
+    ap.add_argument("--transport", choices=registry.transports.names(),
                     default="dense",
                     help="how the consensus exchange moves the flat "
-                         "buffer: dense fused matmul, ring neighbor "
-                         "shift, or bounded-delay gossip")
-    ap.add_argument("--wire-dtype", choices=sorted(transport_lib.WIRE_DTYPES),
+                         "buffer (registered transport plugins)")
+    ap.add_argument("--wire-dtype", choices=registry.wire_codecs.names(),
                     default="f32",
-                    help="exchanged-buffer format; bf16 halves consensus "
-                         "bytes (f32 master copy is kept)")
+                    help="exchanged-buffer wire codec; bf16 halves "
+                         "consensus bytes (f32 master copy is kept)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="gossip bounded delay in rounds (0 = synchronous)")
     ap.add_argument("--mobility",
-                    choices=("static",) + tuple(sorted(
-                        mobility_lib.traces.TRACE_KINDS)),
+                    choices=("static",) + registry.mobility_traces.names(),
                     default="static",
                     help="vehicular mobility scenario: per-round radio-"
                          "range topologies drive the consensus exchange "
@@ -84,7 +90,7 @@ def main() -> None:
                          "split rate)")
     ap.add_argument("--mobility-seed", type=int, default=0,
                     help="trace RNG seed (deterministic per seed)")
-    ap.add_argument("--link-quality", choices=mobility_lib.links.LINK_QUALITIES,
+    ap.add_argument("--link-quality", choices=LINK_QUALITIES,
                     default="binary",
                     help="link weighting: binary unit-disk or quadratic "
                          "distance-faded quality")
@@ -102,11 +108,13 @@ def main() -> None:
             seed=args.mobility_seed, link_quality=args.link_quality)
 
     cfg = get_smoke_arch(args.arch)
-    fed = FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
-                    algorithm=args.algorithm, transport=args.transport,
-                    wire_dtype=args.wire_dtype, staleness=args.staleness,
-                    mobility=mobility)
-    train = TrainConfig(learning_rate=args.lr, batch_size=args.batch)
+    run_cfg = RunConfig(
+        model=cfg,
+        fed=FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
+                      algorithm=args.algorithm, transport=args.transport,
+                      wire_dtype=args.wire_dtype, staleness=args.staleness,
+                      mobility=mobility),
+        train=TrainConfig(learning_rate=args.lr, batch_size=args.batch))
 
     # per-node synthetic corpora with injected duplicates (the paper's
     # redundant-data condition) — CND will see distinct ratios < 1
@@ -118,56 +126,34 @@ def main() -> None:
         for i in range(args.nodes)
     ]
 
-    def loss_fn(params, batch):
-        return transformer.loss_fn(params, cfg, batch,
-                                   group_size=args.batch * args.seq)
-
-    trainer = baselines.ALGORITHMS[args.algorithm](loss_fn, fed, train)
+    # token/label views of the resident per-node corpora: (K, N, T)
+    seqs = np.stack([d.x for d in nodes])
+    data = {"tokens": jnp.asarray(seqs[..., :-1]),
+            "labels": jnp.asarray(seqs[..., 1:])}
     batcher_items = pipeline.FederatedBatcher(nodes, args.batch,
                                               args.local_steps)
-    state = trainer.init(
-        jax.random.PRNGKey(train.seed),
-        lambda r: transformer.init_params(r, cfg),
-        jnp.asarray(batcher_items.node_items()))
+
+    # the Experiment derives the token-LM loss/init from RunConfig.model
+    session = Experiment(run_cfg).compile(data, batcher_items.node_items())
+    state = session.state
     print(f"arch={cfg.name} nodes={args.nodes} alg={args.algorithm} "
           f"driver={args.driver} transport={args.transport}"
           f"/{args.wire_dtype}"
           f"{f'/stale{args.staleness}' if args.staleness else ''} "
           f"CND ratios={np.round(np.asarray(state.ratios), 3)}")
-    if mobility is not None:
-        # report the graph the run actually uses: ring transport gates
-        # radio links to the physical ring
-        from repro.core import topology
-        mask = (topology.adjacency("ring", args.nodes)
-                if args.transport == "ring" else None)
-        stats = mobility_lib.handover_stats(
-            mobility_lib.adjacency_stack(mobility, args.rounds, args.nodes,
-                                         mask=mask))
-        print(f"mobility={mobility.kind} range={mobility.radio_range:.0f}m "
-              f"speed={mobility.speed:.0f}m/s: "
-              f"{stats['links_per_round']:.1f} links/round, "
-              f"churn={stats['churn_rate']:.3f}, "
-              f"{stats['handovers']} handovers, "
-              f"{stats['partitioned_rounds']}/{stats['rounds']} "
-              f"partitioned rounds")
 
     if args.driver == "scan":
-        # token/label views of the resident per-node corpora: (K, N, T)
-        seqs = np.stack([d.x for d in nodes])
-        data = {"tokens": jnp.asarray(seqs[..., :-1]),
-                "labels": jnp.asarray(seqs[..., 1:])}
-        t0 = time.time()
-        state, metrics = trainer.run_rounds(state, data, args.rounds)
-        jax.block_until_ready(state.params)
-        total = time.time() - t0
-        losses = np.asarray(metrics["loss"])
-        disagrees = np.asarray(metrics["disagreement"])
-        per_round = total / max(args.rounds, 1)
+        result = session.run(args.rounds, callbacks=[ChurnLogCallback()])
+        losses = np.asarray(result.metrics["loss"])
+        disagrees = np.asarray(result.metrics["disagreement"])
+        per_round = result.wall_time_s / max(args.rounds, 1)
         for r in range(args.rounds):
             _print_round(r, losses[r], float(disagrees[r]), per_round)
-        print(f"total {total:.1f}s ({per_round * 1e3:.1f} ms/round, "
-              f"single scan dispatch)")
+        print(f"total {result.wall_time_s:.1f}s "
+              f"({per_round * 1e3:.1f} ms/round, single scan dispatch)")
+        state = result.state
     else:
+        trainer = session.experiment.trainer(data)
         for r in range(args.rounds):
             t0 = time.time()
             batch = pipeline.lm_batches(nodes, args.batch, args.local_steps,

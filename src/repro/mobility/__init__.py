@@ -41,15 +41,19 @@ __all__ = [
 
 
 def adjacency_stack(mob: MobilityConfig, rounds: int, k: int,
-                    mask: np.ndarray | None = None) -> np.ndarray:
+                    mask: np.ndarray | None = None,
+                    start: int = 0) -> np.ndarray:
     """(R, K, K) link-weight stack for a mobility scenario.
 
     ``mask``: optional static 0/1 adjacency intersected with every
     round's radio graph (the ring-transport physical constraint).
+    ``start``: first round of the window — the trace is regenerated
+    from t=0 (deterministic per seed) and sliced, so a resumed run
+    continues the same trajectory it left.
     """
-    positions = trace(mob.kind, rounds, k,
+    positions = trace(mob.kind, start + rounds, k,
                       speed=mob.speed, speed_jitter=mob.speed_jitter,
-                      area=mob.area, dt=mob.dt, seed=mob.seed)
+                      area=mob.area, dt=mob.dt, seed=mob.seed)[start:]
     adj = radio_adjacency(positions, mob.radio_range,
                           link_quality=mob.link_quality,
                           min_quality=mob.min_quality)
@@ -61,12 +65,13 @@ def adjacency_stack(mob: MobilityConfig, rounds: int, k: int,
 def scenario_stacks(mob: MobilityConfig, rounds: int, k: int, *,
                     rule: str, gamma_cap: float,
                     ratios=None, sizes=None,
-                    mask: np.ndarray | None = None):
+                    mask: np.ndarray | None = None, start: int = 0):
     """Compose trace -> links -> mixing for one training run.
 
     Returns ``(etas (R, K, K), gammas (R,))`` device arrays ready to
-    ride the ``run_rounds`` scan.
+    ride the ``run_rounds`` scan, covering rounds
+    ``[start, start + rounds)`` of the scenario.
     """
-    adj = adjacency_stack(mob, rounds, k, mask=mask)
+    adj = adjacency_stack(mob, rounds, k, mask=mask, start=start)
     etas = eta_stack(adj, rule, ratios=ratios, sizes=sizes)
     return etas, gamma_stack(etas, gamma_cap)

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.registry import mobility_traces
+
 
 def _rng(seed: int, tag: str) -> np.random.Generator:
     """Seeded generator, decorrelated per scenario kind (crc32 of the
@@ -121,22 +123,21 @@ def waypoint_trace(rounds: int, k: int, *, speed: float = 20.0,
     return pos
 
 
-TRACE_KINDS = {
-    "platoon": platoon_trace,
-    "manhattan": manhattan_trace,
-    "waypoint": waypoint_trace,
-}
+mobility_traces.register("platoon", platoon_trace)
+mobility_traces.register("manhattan", manhattan_trace)
+mobility_traces.register("waypoint", waypoint_trace)
+
+# Back-compat view of the pre-registry module dict (name -> generator);
+# stays live as new traces register.
+TRACE_KINDS = mobility_traces.view()
 
 
 def trace(kind: str, rounds: int, k: int, **kw) -> np.ndarray:
-    """Dispatch on scenario kind. ``kw`` is forwarded to the generator
-    (unknown keys for that generator are dropped)."""
-    try:
-        fn = TRACE_KINDS[kind]
-    except KeyError:
-        raise ValueError(
-            f"unknown mobility kind {kind!r} "
-            f"(choose from {sorted(TRACE_KINDS)} or 'static')") from None
+    """Dispatch on scenario kind — a ``repro.registry.mobility_traces``
+    plugin lookup. ``kw`` is forwarded to the generator (unknown keys
+    for that generator are dropped, so one MobilityConfig drives any
+    registered trace)."""
+    fn = mobility_traces.get(kind)
     import inspect
     allowed = set(inspect.signature(fn).parameters)
     return fn(rounds, k, **{kk: v for kk, v in kw.items() if kk in allowed})

@@ -1,0 +1,225 @@
+"""Plugin registries: the ONE extension mechanism for C-DFL variants.
+
+The paper's recipe (eq. 5 consensus composed with interchangeable
+topologies, mixing weights and exchange schemes) is extensible by
+construction, so every user-selectable scheme family is a named plugin
+in a :class:`Registry` rather than a string branched on in some caller:
+
+* :data:`transports`      — how the flat ``(K, P)`` buffer moves
+  (``repro.core.transport``; entries are ``fed -> Transport`` factories);
+* :data:`wire_codecs`     — how the buffer is represented ON the wire
+  (``WireCodec`` instances: f32, bf16 today; int8+scales drops in here
+  without touching any transport);
+* :data:`mixing_policies` — eq. 6 weight rules on one (weighted)
+  adjacency (``repro.core.topology``);
+* :data:`mobility_traces` — kinematic trace generators
+  (``repro.mobility.traces``);
+* :data:`algorithms`      — trainer-level schemes
+  (:class:`AlgorithmSpec` entries registered by ``repro.core.baselines``).
+
+Registering a plugin is one decorator at its definition site::
+
+    from repro.registry import mobility_traces
+
+    @mobility_traces.register("convoy")
+    def convoy_trace(rounds, k, *, speed=20.0, seed=0, **kw):
+        ...
+
+and the name immediately works everywhere a registered name does:
+``MobilityConfig(kind="convoy")`` validates at construction,
+``launch/train.py --mobility convoy`` appears in the CLI (choices are
+derived from the registries), and ``Experiment``/``make_trainer``
+dispatch to it — no edits outside the plugin.
+
+This module imports nothing from ``repro`` at module scope (configs
+validate against it from ``__post_init__``); the built-in plugins are
+pulled in lazily by :func:`ensure_plugins`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Mapping
+from typing import Any, Callable, Iterator, Optional
+
+
+class Registry:
+    """Name -> plugin mapping with decorator registration.
+
+    Lookup failures list the registered names — the error a user sees
+    when a config/CLI string has a typo, at construction time rather
+    than deep inside trainer assembly.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Any] = {}
+
+    # -- registration -------------------------------------------------------
+    def register(self, name: str, obj: Any = None, *,
+                 overwrite: bool = False):
+        """``register("x", obj)`` or ``@register("x")`` decorator form."""
+        if obj is None:
+            def deco(fn):
+                self._add(name, fn, overwrite)
+                return fn
+            return deco
+        self._add(name, obj, overwrite)
+        return obj
+
+    def _add(self, name: str, obj: Any, overwrite: bool) -> None:
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} plugin name must be a non-empty "
+                             f"string, got {name!r}")
+        if name in self._entries and not overwrite:
+            raise ValueError(
+                f"{self.kind} {name!r} already registered "
+                f"(pass overwrite=True to replace it)")
+        self._entries[name] = obj
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    # -- lookup -------------------------------------------------------------
+    def get(self, name: str) -> Any:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r} "
+                f"(registered: {', '.join(self.names()) or '<none>'})"
+            ) from None
+
+    def validate(self, name: str) -> str:
+        """Raise the listing :class:`ValueError` unless registered."""
+        self.get(name)
+        return name
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}: {list(self.names())})"
+
+    def view(self, transform: Optional[Callable] = None) -> "RegistryView":
+        """Live read-only Mapping over the registry (back-compat for the
+        module-level dicts the pre-registry API exposed)."""
+        return RegistryView(self, transform)
+
+
+class RegistryView(Mapping):
+    """Read-only live Mapping facade over a :class:`Registry` — keeps
+    legacy module attributes (``TRACE_KINDS``, ``ALGORITHMS``, ...)
+    working, including for plugins registered after import."""
+
+    def __init__(self, registry: Registry,
+                 transform: Optional[Callable] = None):
+        self._registry = registry
+        self._transform = transform
+
+    def __getitem__(self, name: str) -> Any:
+        obj = self._registry.get(name)
+        return self._transform(obj) if self._transform else obj
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._registry)
+
+    def __len__(self) -> int:
+        return len(self._registry)
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._registry
+
+    def __repr__(self) -> str:
+        return f"RegistryView({self._registry!r})"
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmSpec:
+    """One trainer-level scheme (paper Sec. 5.3 and beyond).
+
+    ``mixing``: the :data:`mixing_policies` name its exchange weights
+    use. ``uses_transport``: False for schemes with no once-per-round
+    flat-buffer exchange to route (fedavg's server average, dpsgd's
+    per-step leaf-wise gossip). ``make``: trainer constructor with the
+    ``(loss_fn, fed, train, **kw) -> Trainer`` signature.
+    """
+
+    name: str
+    mixing: str
+    uses_transport: bool
+    make: Callable
+
+
+# -- the registry instances --------------------------------------------------
+
+transports = Registry("transport")
+wire_codecs = Registry("wire codec")
+mixing_policies = Registry("mixing policy")
+mobility_traces = Registry("mobility trace")
+algorithms = Registry("algorithm")
+
+ALL_REGISTRIES = {
+    "transports": transports,
+    "wire_codecs": wire_codecs,
+    "mixing_policies": mixing_policies,
+    "mobility_traces": mobility_traces,
+    "algorithms": algorithms,
+}
+
+_PLUGINS_LOADED = False
+_PLUGINS_LOADING = False
+
+
+def ensure_plugins() -> None:
+    """Import the built-in plugin modules (idempotent). Called lazily by
+    config validation and the Experiment façade so that merely importing
+    ``repro.registry`` stays dependency-free. A failed import is NOT
+    latched: the next call retries, so the caller sees the real import
+    error rather than permanently empty registries."""
+    global _PLUGINS_LOADED, _PLUGINS_LOADING
+    if _PLUGINS_LOADED or _PLUGINS_LOADING:
+        return
+    _PLUGINS_LOADING = True
+    try:
+        # Registration happens at each plugin's definition site; the
+        # order here only matters for import-cycle hygiene (topology/
+        # transport first, trainer-level last).
+        import repro.core.topology    # noqa: F401  (mixing policies)
+        import repro.core.transport   # noqa: F401  (transports, codecs)
+        import repro.mobility.traces  # noqa: F401  (mobility traces)
+        import repro.core.baselines   # noqa: F401  (algorithms)
+        _PLUGINS_LOADED = True
+    finally:
+        _PLUGINS_LOADING = False
+
+
+# -- config validation (called from dataclass __post_init__) -----------------
+
+def validate_fed_config(fed) -> None:
+    """Every plugin name on a ``FedConfig`` must be registered — the
+    error (listing valid names) fires at construction, not deep inside
+    trainer assembly."""
+    ensure_plugins()
+    transports.validate(fed.transport)
+    wire_codecs.validate(fed.wire_dtype)
+    mixing_policies.validate(fed.mixing)
+    algorithms.validate(fed.algorithm)
+
+
+def validate_mobility_config(mob) -> None:
+    ensure_plugins()
+    if mob.kind != "static":
+        mobility_traces.validate(mob.kind)
+    from repro.mobility.links import LINK_QUALITIES
+    if mob.link_quality not in LINK_QUALITIES:
+        raise ValueError(f"unknown link_quality {mob.link_quality!r} "
+                         f"(choose from {LINK_QUALITIES})")

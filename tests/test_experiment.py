@@ -1,0 +1,244 @@
+"""Experiment/Session façade acceptance: old string-configured trainer
+path == new declarative path (per transport × mobility), checkpoint/
+resume reproduces an unsegmented run exactly, callbacks subsume the
+ad-hoc kwargs, and the make_trainer shim deprecates without breaking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FedConfig, MobilityConfig, RunConfig,
+                                TrainConfig)
+from repro.configs.paper_models import MLP_CONFIG
+from repro.core.cdfl import build_trainer, make_trainer
+from repro.data import pipeline, synthetic
+from repro.experiment import (Callback, CheckpointCallback, ChurnLogCallback,
+                              EvalCallback, Experiment)
+from repro.models import simple
+
+PLATOON = MobilityConfig(kind="platoon", speed=20.0, speed_jitter=0.3,
+                         radio_range=250.0, dt=2.0, seed=0)
+TRANSPORT_CASES = [
+    {},                                           # dense f32
+    {"transport": "ring"},
+    {"transport": "gossip", "staleness": 2},
+    {"wire_dtype": "bf16"},
+]
+TRANSPORT_IDS = ["dense", "ring", "gossip_s2", "dense_bf16"]
+
+_LOSS = simple.make_mlp_loss(MLP_CONFIG)
+
+
+def _setup(**fed_kw):
+    nodes = [synthetic.synthetic_mnist(seed=i, n=160) for i in range(4)]
+    items = jnp.asarray(
+        pipeline.FederatedBatcher(nodes, 32, 2).node_items())
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    fed = FedConfig(num_nodes=4, local_steps=2, **fed_kw)
+    train = TrainConfig(learning_rate=1e-3)
+    return fed, train, data, items
+
+
+def _experiment(fed, train):
+    return Experiment.from_parts(
+        lambda p, b: _LOSS(p, b),
+        lambda r: simple.mlp_init(r, MLP_CONFIG), fed=fed, train=train)
+
+
+def _assert_params_close(a, b, atol=1e-6):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+# --- acceptance: old path == new path, per transport × mobility -------------
+
+@pytest.mark.parametrize("mob", [None, PLATOON], ids=["static", "platoon"])
+@pytest.mark.parametrize("fed_kw", TRANSPORT_CASES, ids=TRANSPORT_IDS)
+def test_old_trainer_path_equals_experiment_path(fed_kw, mob):
+    fed, train, data, items = _setup(mobility=mob, **fed_kw)
+    rng_init, rng_sample = jax.random.PRNGKey(0), jax.random.PRNGKey(3)
+
+    tr = build_trainer(lambda p, b: _LOSS(p, b), fed, train)
+    state = tr.init(rng_init, lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    items)
+    old_final, old_m = tr.run_rounds(state, data, 6, rng=rng_sample)
+
+    session = _experiment(fed, train).compile(
+        data, items, rng=rng_init, sample_rng=rng_sample)
+    result = session.run(6)
+
+    _assert_params_close(old_final.params, result.final_params)
+    np.testing.assert_allclose(np.asarray(old_m["loss"]),
+                               np.asarray(result.metrics["loss"]),
+                               atol=1e-6)
+
+
+# --- acceptance: 10 + resume(10) == straight 20, per transport --------------
+
+@pytest.mark.parametrize("fed_kw", TRANSPORT_CASES + [{"mobility": PLATOON}],
+                         ids=TRANSPORT_IDS + ["dense_platoon"])
+def test_checkpoint_resume_equals_straight_run(fed_kw, tmp_path):
+    fed, train, data, items = _setup(**fed_kw)
+    exp = _experiment(fed, train)
+    path = str(tmp_path / "ckpt")
+
+    straight = exp.compile(data, items).run(20)
+
+    first = exp.compile(data, items)
+    first.run(10)
+    first.save(path)
+    assert first.rounds_completed == 10
+
+    resumed = exp.compile(data, items).resume(path)
+    assert resumed.rounds_completed == 10
+    result = resumed.run(10)
+    assert resumed.rounds_completed == 20
+
+    _assert_params_close(straight.final_params, result.final_params)
+    # optimizer state resumed too: Adam stepped 20 * local_steps times
+    assert (np.asarray(result.state.opt.step) == 20 * 2).all()
+
+
+def test_periodic_checkpoint_segmentation_is_numerically_invisible(tmp_path):
+    """every=N callbacks split the run into several scans; params AND
+    stacked metrics must equal the single-scan run exactly."""
+    fed, train, data, items = _setup()
+    exp = _experiment(fed, train)
+    path = str(tmp_path / "ck")
+
+    one = exp.compile(data, items).run(9)
+    seg = exp.compile(data, items).run(
+        9, callbacks=[CheckpointCallback(path, every=4)])
+
+    _assert_params_close(one.final_params, seg.final_params)
+    assert np.asarray(seg.metrics["loss"]).shape == (9, 4)
+    np.testing.assert_allclose(np.asarray(one.metrics["loss"]),
+                               np.asarray(seg.metrics["loss"]), atol=1e-6)
+    # the callback left a resumable checkpoint behind (final save)
+    resumed = exp.compile(data, items).resume(path)
+    assert resumed.rounds_completed == 9
+
+
+# --- callbacks subsume the ad-hoc kwargs ------------------------------------
+
+def test_eval_callback_rides_scan_as_metric():
+    fed, train, data, items = _setup()
+    test = synthetic.synthetic_mnist(seed=99, n=200)
+
+    def eval_fn(p):
+        return simple.accuracy(simple.mlp_forward(p, jnp.asarray(test.x)),
+                               jnp.asarray(test.y))
+
+    result = _experiment(fed, train).compile(data, items).run(
+        8, callbacks=[EvalCallback(eval_fn)])
+    accs = np.asarray(result.metrics["eval"])
+    assert accs.shape == (8, 4)
+    assert accs[-1].mean() > accs[0].mean() - 0.05    # training, not noise
+
+
+def test_eval_callback_custom_metric_name():
+    fed, train, data, items = _setup()
+    result = _experiment(fed, train).compile(data, items).run(
+        3, callbacks=[EvalCallback(lambda p: jnp.float32(1.0),
+                                   name="acc")])
+    assert "acc" in result.metrics and "eval" not in result.metrics
+    assert np.asarray(result.metrics["acc"]).shape == (3, 4)
+
+
+def test_callback_hooks_fire_in_order(tmp_path):
+    fed, train, data, items = _setup()
+    calls = []
+
+    class Probe(Callback):
+        every = 3
+
+        def on_run_start(self, session, rounds):
+            calls.append(("start", rounds))
+
+        def on_rounds(self, session, end_round):
+            calls.append(("rounds", end_round))
+
+        def on_run_end(self, session, result):
+            calls.append(("end", result.rounds))
+
+    _experiment(fed, train).compile(data, items).run(
+        7, callbacks=[Probe()])
+    assert calls == [("start", 7), ("rounds", 3), ("rounds", 6),
+                     ("end", 7)]
+
+
+def test_churn_log_callback_reports_mobility(capsys):
+    fed, train, data, items = _setup(mobility=PLATOON)
+    _experiment(fed, train).compile(data, items).run(
+        4, callbacks=[ChurnLogCallback()])
+    out = capsys.readouterr().out
+    assert "mobility=platoon" in out and "churn=" in out
+
+
+def test_churn_log_callback_silent_on_static(capsys):
+    fed, train, data, items = _setup()
+    _experiment(fed, train).compile(data, items).run(
+        2, callbacks=[ChurnLogCallback()])
+    assert "mobility" not in capsys.readouterr().out
+
+
+# --- façade structure --------------------------------------------------------
+
+def test_run_config_model_derives_token_lm_loss():
+    from repro.configs.registry import get_smoke_arch
+    cfg = RunConfig(model=get_smoke_arch("qwen3-1.7b"),
+                    fed=FedConfig(num_nodes=4, local_steps=1),
+                    train=TrainConfig(learning_rate=3e-4, batch_size=4))
+    nodes = [synthetic.token_lm(seed=i, n_seqs=16, seq_len=16,
+                                vocab=cfg.model.vocab_size)
+             for i in range(4)]
+    seqs = np.stack([d.x for d in nodes])
+    data = {"tokens": jnp.asarray(seqs[..., :-1]),
+            "labels": jnp.asarray(seqs[..., 1:])}
+    items = jnp.asarray(
+        pipeline.FederatedBatcher(nodes, 4, 1).node_items())
+    result = Experiment(cfg).compile(data, items).run(2)
+    assert np.isfinite(np.asarray(result.metrics["loss"])).all()
+
+
+def test_experiment_rejects_config_and_parts_together():
+    cfg = RunConfig(model=None)
+    with pytest.raises(ValueError, match="not both"):
+        Experiment(cfg, fed=FedConfig())
+
+
+def test_trainer_cache_shared_across_sessions():
+    fed, train, data, items = _setup()
+    exp = _experiment(fed, train)
+    s1 = exp.compile(data, items)
+    s2 = exp.compile(data, items)
+    assert exp.trainer(data) is exp.trainer(data)
+    assert len(exp._trainers) == 1
+    r1, r2 = s1.run(2), s2.run(2)
+    np.testing.assert_allclose(np.asarray(r1.metrics["loss"]),
+                               np.asarray(r2.metrics["loss"]), atol=0)
+
+
+def test_run_rejects_nonpositive_rounds_and_double_eval():
+    fed, train, data, items = _setup()
+    session = _experiment(fed, train).compile(data, items)
+    with pytest.raises(ValueError, match="positive"):
+        session.run(0)
+    ev = EvalCallback(lambda p: jnp.float32(0.0))
+    with pytest.raises(ValueError, match="at most one"):
+        session.run(1, callbacks=[ev, EvalCallback(lambda p: 1.0)])
+
+
+# --- deprecation shim --------------------------------------------------------
+
+def test_make_trainer_shim_warns_and_still_works():
+    fed, train, data, items = _setup()
+    with pytest.warns(DeprecationWarning, match="Experiment"):
+        tr = make_trainer(lambda p, b: _LOSS(p, b), fed, train)
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG), items)
+    final, m = tr.run_rounds(state, data, 2)
+    assert int(final.round) == 2
+    assert np.isfinite(np.asarray(m["loss"])).all()

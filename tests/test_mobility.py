@@ -162,10 +162,15 @@ def test_constant_eta_stack_matches_hoisted_round_driver(fed_kw):
 
     # hoisted reference: tr.round recomputes the SAME eta from the
     # round-invariant ratios each call; replicate the scan's index
-    # sampling exactly and gather the same minibatches
+    # sampling exactly (per-round keys folded on the absolute round
+    # index — the documented resume-invariant contract) and gather the
+    # same minibatches
     tr2, state2, _ = _mnist_setup(rounds, **fed_kw)
-    idx = jax.random.randint(rng, (rounds, 4, 2, 32), 0,
-                             data["x"].shape[1])
+    keys = jax.vmap(lambda r: jax.random.fold_in(rng, r))(
+        jnp.arange(rounds))
+    idx = jax.vmap(
+        lambda k: jax.random.randint(k, (4, 2, 32), 0,
+                                     data["x"].shape[1]))(keys)
     for r in range(rounds):
         batches = jax.tree.map(
             lambda a: jax.vmap(lambda n, i: n[i])(a, idx[r]), data)

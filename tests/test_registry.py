@@ -1,0 +1,202 @@
+"""Plugin registry semantics + config-construction validation: the
+registries are the ONE dispatch point for transports, wire codecs,
+mixing policies, mobility traces and algorithms, and a bad plugin name
+fails at FedConfig/MobilityConfig construction listing the registered
+alternatives."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.configs.base import FedConfig, MobilityConfig
+from repro.core import flatten, topology, transport
+from repro.registry import Registry
+
+
+# --- generic Registry semantics --------------------------------------------
+
+def test_register_get_and_decorator_forms():
+    reg = Registry("widget")
+    reg.register("a", 1)
+
+    @reg.register("b")
+    def plug():
+        return 2
+
+    assert reg.get("a") == 1
+    assert reg.get("b") is plug
+    assert reg.names() == ("a", "b")
+    assert "a" in reg and "zzz" not in reg
+
+
+def test_duplicate_registration_rejected_unless_overwrite():
+    reg = Registry("widget")
+    reg.register("a", 1)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", 2)
+    reg.register("a", 2, overwrite=True)
+    assert reg.get("a") == 2
+
+
+def test_unknown_name_error_lists_registered():
+    reg = Registry("widget")
+    reg.register("alpha", 1)
+    reg.register("beta", 2)
+    with pytest.raises(ValueError, match="alpha, beta"):
+        reg.get("gamma")
+
+
+def test_view_is_live_mapping():
+    reg = Registry("widget")
+    view = reg.view(lambda v: v * 10)
+    reg.register("a", 1)
+    assert dict(view) == {"a": 10}
+    reg.register("b", 2)                  # registered AFTER view creation
+    assert sorted(view) == ["a", "b"]
+    assert view["b"] == 20
+    assert len(view) == 2
+
+
+# --- the built-in plugin population ----------------------------------------
+
+def test_builtin_plugins_registered():
+    registry.ensure_plugins()
+    assert registry.transports.names() == ("dense", "gossip", "ring")
+    assert registry.wire_codecs.names() == ("bf16", "f32")
+    assert set(registry.mixing_policies.names()) == {
+        "cnd", "datasize", "uniform", "metropolis"}
+    assert registry.mobility_traces.names() == (
+        "manhattan", "platoon", "waypoint")
+    assert set(registry.algorithms.names()) == {
+        "cdfl", "cfa", "cdfa_m", "dpsgd", "fedavg", "metropolis"}
+
+
+def test_algorithm_specs_carry_mixing_and_transport_flags():
+    registry.ensure_plugins()
+    for name in registry.algorithms.names():
+        spec = registry.algorithms.get(name)
+        assert spec.mixing == topology.ALGORITHM_MIXING[name]
+        assert spec.uses_transport == (name not in ("fedavg", "dpsgd"))
+        assert callable(spec.make)
+
+
+def test_legacy_module_views_stay_live():
+    from repro.core import baselines
+    from repro.mobility import traces
+    assert "metropolis" in baselines.ALGORITHMS
+    assert sorted(traces.TRACE_KINDS) == ["manhattan", "platoon",
+                                          "waypoint"]
+    assert sorted(transport.WIRE_DTYPES) == ["bf16", "f32"]
+    # the legacy dict mapped name -> jnp dtype; the view keeps that
+    assert transport.WIRE_DTYPES["bf16"] == jnp.bfloat16
+    assert transport.WIRE_DTYPES["f32"] == jnp.float32
+    assert sorted(transport.TRANSPORTS) == ["dense", "gossip", "ring"]
+
+
+# --- config validation at construction -------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"transport": "carrier-pigeon"},
+    {"wire_dtype": "fp8"},
+    {"mixing": "psychic"},
+    {"algorithm": "sgdx"},
+], ids=["transport", "wire_dtype", "mixing", "algorithm"])
+def test_fed_config_validates_plugin_names_at_construction(kw):
+    with pytest.raises(ValueError, match="registered:"):
+        FedConfig(**kw)
+
+
+def test_mobility_config_validates_at_construction():
+    with pytest.raises(ValueError, match="registered:"):
+        MobilityConfig(kind="teleport")
+    with pytest.raises(ValueError, match="link_quality"):
+        MobilityConfig(kind="platoon", link_quality="psychic")
+    MobilityConfig(kind="static")         # static is always allowed
+
+
+def test_registered_plugin_becomes_config_and_dispatch_valid():
+    """One decorator = the name works everywhere: config validation,
+    trace dispatch, CLI choices derivation."""
+    from repro.mobility import traces
+
+    @registry.mobility_traces.register("teleport")
+    def teleport_trace(rounds, k, *, area=1000.0, seed=0, **kw):
+        rng = np.random.default_rng(seed)
+        return (area * rng.random((rounds, k, 2))).astype(np.float32)
+
+    try:
+        mob = MobilityConfig(kind="teleport")            # validates now
+        pos = traces.trace("teleport", 5, 3, seed=1)
+        assert pos.shape == (5, 3, 2)
+        assert "teleport" in registry.mobility_traces.names()
+        assert "teleport" in traces.TRACE_KINDS          # live legacy view
+        assert mob.kind == "teleport"
+    finally:
+        registry.mobility_traces.unregister("teleport")
+    with pytest.raises(ValueError):
+        MobilityConfig(kind="teleport")
+
+
+# --- wire codecs ------------------------------------------------------------
+
+def test_wire_codec_roundtrip_and_bytes():
+    buf = jnp.asarray(np.random.default_rng(0).normal(size=(4, 256)),
+                      jnp.float32)
+    layout = flatten.make_layout({"w": jnp.zeros((4, 16, 16))})
+    f32 = transport.wire_codec("f32")
+    bf16 = transport.wire_codec("bf16")
+    np.testing.assert_array_equal(np.asarray(f32.roundtrip(buf)),
+                                  np.asarray(buf))
+    assert bf16.encode(buf).dtype == jnp.bfloat16
+    assert bf16.roundtrip(buf).dtype == jnp.float32
+    assert f32.wire_bytes(layout) == layout.padded * 4
+    assert bf16.wire_bytes(layout) == layout.padded * 2
+    with pytest.raises(ValueError, match="registered:"):
+        transport.wire_codec("int3")
+
+
+def test_custom_wire_codec_plugs_into_every_transport():
+    """A codec registered AFTER the transports were written drives all
+    of them with no transport edits — here a toy value-truncation codec
+    with pytree side information (per-node scales), the structure the
+    planned int8+scales codec needs."""
+    import dataclasses as dc
+    import jax
+
+    @dc.dataclass(frozen=True)
+    class ScaledCodec(transport.WireCodec):
+        name: str = "scaled-test"
+
+        def encode(self, buf):
+            scale = jnp.max(jnp.abs(buf), axis=1, keepdims=True) + 1e-8
+            return {"q": (buf / scale).astype(jnp.bfloat16), "s": scale}
+
+        def decode(self, wire, dtype=jnp.float32):
+            return (wire["q"].astype(dtype) * wire["s"].astype(dtype))
+
+        def wire_bytes(self, layout):
+            return layout.padded * 2 + 4
+
+    registry.wire_codecs.register("scaled-test", ScaledCodec())
+    try:
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                         (4, 33, 7))}
+        buf, layout = flatten.flatten(params)
+        eta = topology.uniform_mixing(
+            jnp.asarray(topology.adjacency("ring", 4)))
+        for t in (transport.DenseTransport(wire_dtype="scaled-test"),
+                  transport.RingShardTransport(wire_dtype="scaled-test"),
+                  transport.GossipTransport(staleness=1,
+                                            wire_dtype="scaled-test")):
+            state = t.init_state(buf)
+            out, state = t.exchange(buf, eta, 0.4, state, jnp.int32(0))
+            assert out.shape == buf.shape
+            assert np.isfinite(np.asarray(out)).all()
+            # bf16 mantissa wire: close to the exact f32 exchange
+            exact, _ = transport.DenseTransport().exchange(buf, eta, 0.4)
+            if not isinstance(t, transport.GossipTransport):
+                np.testing.assert_allclose(np.asarray(out),
+                                           np.asarray(exact), atol=0.05)
+            assert t.wire_bytes(layout) == layout.padded * 2 + 4
+    finally:
+        registry.wire_codecs.unregister("scaled-test")
