@@ -20,6 +20,8 @@ REQUIRED_KEYS = {"name": str, "us_per_call": (int, float), "derived": str}
 REQUIRED_FAMILIES = (
     "cnd_sketch_",
     "consensus_mix_",
+    "flatten_pack_",        # single-pass pack micro (pack-path scaling)
+    "unflatten_",           # single-pass unpack micro
     "consensus_step_",
     "transport_",
     "consensus_",           # scanned consensus rounds

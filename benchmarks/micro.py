@@ -50,20 +50,24 @@ def bench_sketch():
 
 
 def bench_consensus_mix():
+    """Pallas kernel body (force_kernel — interpret mode off TPU; the
+    auto dispatch never interprets, see repro.kernels.ops) vs the XLA
+    reference the off-TPU wrappers actually run."""
     from repro.kernels import ops, ref
     rows = []
     for rows_ in (2048, 8192):
         w = jnp.ones((rows_, 128))
         nb = jnp.ones((2, rows_, 128)) * 2.0
         eta = jnp.asarray([0.5, 0.5])
-        us_k = _time(lambda *a: ops.consensus_mix(*a), w, nb, eta,
-                     jnp.float32(0.5))
+        us_k = _time(lambda *a: ops.consensus_mix(*a, force_kernel=True),
+                     w, nb, eta, jnp.float32(0.5))
         us_r = _time(jax.jit(ref.consensus_mix), w, nb, eta,
                      jnp.float32(0.5))
         mb = rows_ * 128 * 4 * 4 / 1e6
         rows.append({"name": f"consensus_mix_kernel_r{rows_}",
                      "us_per_call": us_k,
-                     "derived": f"{mb / us_k * 1e3:.1f} MB/ms interp"})
+                     "derived": f"{mb / us_k * 1e3:.1f} MB/ms interp "
+                                f"(forced; never auto-selected)"})
         rows.append({"name": f"consensus_mix_xla_r{rows_}",
                      "us_per_call": us_r,
                      "derived": f"{mb / us_r * 1e3:.1f} MB/ms"})
@@ -129,6 +133,38 @@ def _stacked_pytree(shapes, k=4, seed=0):
             for i, s in enumerate(shapes)}
 
 
+_MLP_SHAPES = [(784, 30), (30,), (30, 10), (10,)]
+# transformer-like: 12 blocks x 6 leaves + embeds = 74 leaves, ~1M params
+_XF_SHAPES = [s for _ in range(12)
+              for s in [(128, 128), (128,), (128, 256), (256,),
+                        (256, 128), (128,)]] + [(256, 128), (128, 256)]
+
+
+def bench_flatten(quick: bool = False):
+    """Single-pass pack/unpack micro rows — the pack path the one-shot
+    flat consensus step used to collapse on (0.09x of per-leaf at 74
+    leaves). Runs in the CI smoke job (--quick --micro-only) so a
+    pack-path scaling regression fails fast."""
+    from repro.core import flatten
+    rows = []
+    reps = 3 if quick else 7
+    for tag, shapes in (("mlp4leaf", _MLP_SHAPES), ("xf74leaf", _XF_SHAPES)):
+        params = _stacked_pytree(shapes)
+        layout = flatten.make_layout(params)
+        mb = layout.num_nodes * layout.total * 4 / 1e6
+        pack = jax.jit(lambda p: flatten.flatten(p, layout)[0])
+        us_p = _median_time(pack, params, reps=reps)
+        buf = jax.block_until_ready(pack(params))
+        unpack = jax.jit(lambda b: flatten.unflatten(b, layout))
+        us_u = _median_time(unpack, buf, reps=reps)
+        rows.append({"name": f"flatten_pack_{tag}", "us_per_call": us_p,
+                     "derived": f"{mb / us_p * 1e3:.1f} MB/ms "
+                                f"({len(shapes)} leaves)"})
+        rows.append({"name": f"unflatten_{tag}", "us_per_call": us_u,
+                     "derived": f"{mb / us_u * 1e3:.1f} MB/ms"})
+    return rows
+
+
 def bench_flat_consensus(quick: bool = False):
     """One fused (K,K)@(K,P) mix vs one einsum per leaf (seed path).
 
@@ -138,18 +174,12 @@ def bench_flat_consensus(quick: bool = False):
     from repro.core import consensus, topology
     from repro.kernels import ref
     rows = []
-    mlp_shapes = [(784, 30), (30,), (30, 10), (10,)]
-    xf_shapes = []
-    for _ in range(12):                      # 12 blocks x 6 leaves + embeds
-        xf_shapes += [(128, 128), (128,), (128, 256), (256,),
-                      (256, 128), (128,)]
-    xf_shapes += [(256, 128), (128, 256)]
     adj = jnp.asarray(topology.adjacency("ring", 4))
     eta = topology.cnd_mixing(adj, jnp.asarray([0.3, 0.8, 0.6, 0.9]))
 
-    cases = [("mlp4leaf", mlp_shapes)]
+    cases = [("mlp4leaf", _MLP_SHAPES)]
     if not quick:
-        cases.append(("xf74leaf", xf_shapes))
+        cases.append(("xf74leaf", _XF_SHAPES))
     for tag, shapes in cases:
         params = _stacked_pytree(shapes)
         n_el = sum(int(np.prod(s)) for s in shapes)
@@ -276,8 +306,11 @@ def bench_scan_rounds(quick: bool = False):
     node_items = jnp.asarray(batcher.node_items())
     state0 = exp.compile(data, node_items).state
 
-    # --- seed path: per-round loop over the seed round (per-leaf ops) ----
+    # --- seed path: per-round loop over the seed round (per-leaf ops;
+    # the seed kept pytree Adam state, so build it here — FedState now
+    # carries the flat-resident moments) ----
     opt = make_adam(1e-3, 0.9, 0.999, 1e-7, 0.0, 0.0)
+    opt_state0 = jax.vmap(opt.init)(state0.params)
     adj = jnp.asarray(topology.adjacency("ring", 4))
     ratios = state0.ratios
 
@@ -304,7 +337,7 @@ def bench_scan_rounds(quick: bool = False):
     log = io.StringIO()
 
     def run_seed_loop():
-        p, o = state0.params, state0.opt
+        p, o = state0.params, opt_state0
         for r in range(rounds):
             rb = batcher.next_round()
             batch = {"x": jnp.asarray(rb["x"]), "y": jnp.asarray(rb["y"])}
@@ -352,6 +385,58 @@ def bench_scan_rounds(quick: bool = False):
                     f"scan is {us_loop / us_scan:.2f}x faster than "
                     f"seed loop"},
     ]
+
+
+def bench_scan_rounds_xf(quick: bool = False):
+    """End-to-end many-leaf scan: the 74-leaf transformer-like tree
+    (~1M params) under a cheap elementwise loss, so the round PIPELINE
+    — consensus mix, buffer residency, per-step gradient handling, Adam
+    — dominates over matmul compute. This is the regime the
+    flat-resident refactor targets: per-leaf op overhead scales with
+    leaf count, the flat path does not."""
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.experiment import Experiment
+
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 3
+    shapes = _XF_SHAPES
+    n_el = sum(int(np.prod(s)) for s in shapes)
+
+    def init_params(rng):
+        ks = jax.random.split(rng, len(shapes))
+        return {f"p{i:03d}": 0.1 * jax.random.normal(ks[i], s)
+                for i, s in enumerate(shapes)}
+
+    def loss_fn(params, batch):
+        # pulls every leaf toward the batch mean: touches all 74 leaves
+        # fwd + bwd with O(params) work and no gemm to hide behind
+        t = batch["t"].mean()
+        leaves = jax.tree.leaves(params)
+        return sum(jnp.mean((l - t) ** 2) for l in leaves) / len(leaves)
+
+    exp = Experiment.from_parts(
+        loss_fn, init_params,
+        fed=FedConfig(num_nodes=4, local_steps=4),
+        train=TrainConfig(learning_rate=1e-3, batch_size=8))
+    data = {"t": 0.01 * jnp.ones((4, 64, 8))}
+    node_items = jnp.arange(4 * 16 * 4, dtype=jnp.int32).reshape(4, 16, 4)
+    sessions = [exp.compile(data, node_items) for _ in range(1 + reps)]
+
+    def run():
+        res = sessions.pop().run(rounds, rng=jax.random.PRNGKey(11))
+        return jax.tree.leaves(res.state.params)[0]
+
+    jax.block_until_ready(run())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        ts.append(time.perf_counter() - t0)
+    us = statistics.median(ts) * 1e6
+    return [{"name": f"cdfl_{rounds}rounds_scan_flat_xf",
+             "us_per_call": us,
+             "derived": f"{us / rounds:.0f} us/round; 74-leaf tree, "
+                        f"{n_el} params/node, 4 local steps"}]
 
 
 def bench_mobility(quick: bool = False):

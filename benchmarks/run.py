@@ -33,12 +33,14 @@ def main() -> None:
     quick_kw = {"quick": True} if args.quick else {}
     for fn, kw in ((micro.bench_sketch, {}),
                    (micro.bench_consensus_mix, {}),
+                   (micro.bench_flatten, quick_kw),
                    (micro.bench_flat_consensus, quick_kw),
                    (micro.bench_transports, quick_kw),
                    (micro.bench_scan_consensus_rounds, quick_kw),
                    (micro.bench_rwkv_formulations, {}),
                    (micro.bench_consensus_round, {}),
                    (micro.bench_scan_rounds, quick_kw),
+                   (micro.bench_scan_rounds_xf, quick_kw),
                    (micro.bench_mobility, quick_kw)):
         for row in fn(**kw):
             json_rows.append(row)

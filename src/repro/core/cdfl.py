@@ -20,6 +20,19 @@ Two drivers:
     ``jax.lax.scan`` with donated state buffers — no per-round jit
     dispatch and no host-numpy batch transfer.
 
+The round pipeline is FLAT-RESIDENT (except dpsgd): params and Adam
+moments live in lane-padded ``(K, P)`` buffers (``FedState.opt`` is a
+:class:`repro.optim.FlatAdamState`), the consensus exchange and the
+scan carry operate on the buffers directly, and params are packed once
+per run — not once per round. Whether the LOCAL STEPS also run in flat
+space follows the backend (``build_trainer(flat_local=...)``): on
+accelerators the fused flat Adam replaces 3 x n_leaves small ops per
+step and only the forward/backward reads pytree slice views; on CPU
+the step loop runs in leaf space (XLA:CPU's slice/pack lowering makes
+per-step buffer views a measured pessimization) with a one-time
+conversion at the scan boundary. Both lowerings are elementwise the
+same arithmetic.
+
 How the exchange moves between nodes is pluggable: both drivers route
 the flat-buffer mix through a ``repro.core.transport`` Transport (dense
 fused matmul, ring-sharded neighbor shift, or bounded-delay gossip; any
@@ -55,12 +68,13 @@ from repro import registry
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core import consensus, flatten, sketch, topology
 from repro.core import transport as transport_lib
-from repro.optim import adam
+from repro.optim import FlatAdamState, adam, flat_adam
 
 
 class FedState(NamedTuple):
     params: object            # pytree, leaves (K, ...)
-    opt: object               # AdamState with (K, ...) leaves
+    opt: object               # FlatAdamState with (K, P) moment buffers
+                              # (dpsgd: pytree AdamState, leaves (K, ...))
     ratios: jax.Array         # (K,) CND distinct ratios Ë_k
     sizes: jax.Array          # (K,) raw dataset sizes E_k
     round: jax.Array          # int32
@@ -93,7 +107,8 @@ def _node_sketches(node_items, fed: FedConfig):
 
 def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                   eval_fn: Optional[Callable] = None,
-                  transport: Any = None) -> Trainer:
+                  transport: Any = None,
+                  flat_local: Optional[bool] = None) -> Trainer:
     """loss_fn(params, batch) -> scalar loss. batch leaves have no K dim
     (the trainer vmaps over nodes).
 
@@ -107,6 +122,22 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
     ``fed.transport``/``fed.wire_dtype``/``fed.staleness`` select.
     fedavg (centralized server average) and dpsgd (per-step leaf-wise
     gossip) bypass the transport; see ``mix_buf``/``round_body``.
+
+    ``flat_local``: run the LOCAL STEPS on the flat buffer (params and
+    Adam moments never leave the (K, P) buffers; gradients are packed
+    once per step) vs. in leaf space (pytree params/moments inside the
+    step loop, converted at the scan boundary). ``None`` picks per
+    backend: flat on accelerators — where it removes ~3 x n_leaves
+    small ops per local step — and leaf space on CPU, where XLA:CPU's
+    slice/pack lowering makes the per-step buffer views a measured
+    ~10% end-to-end pessimization. For f32 params the two lowerings
+    are elementwise the same arithmetic (tested to 1e-6 incl. moments;
+    tests/test_cdfl.py). Sub-f32 param leaves (bf16) differ by design:
+    the flat loop keeps the f32 master buffer between steps, the leaf
+    loop requantizes params to leaf dtype after every Adam step — pin
+    ``flat_local`` explicitly if cross-backend reproducibility of a
+    bf16-param model matters. Either way the FedState carries the
+    moments as flat (K, P) buffers.
     """
     registry.ensure_plugins()
     spec = registry.algorithms.get(fed.algorithm)
@@ -137,11 +168,23 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     f"leaf-wise gossip) — got transport={fed.transport}/"
                     f"{fed.wire_dtype}/staleness={fed.staleness}")
             transport = transport_lib.DenseTransport()
+    # dpsgd mixes leaf-wise every SGD step, so it keeps the pytree Adam;
+    # every other algorithm runs the flat-resident pipeline: params AND
+    # Adam moments live in (K, P) FedState buffers, the consensus
+    # exchange and the scan carry are flat, and the local-step loop
+    # representation follows ``flat_local`` (see docstring).
     opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
                train.weight_decay, train.grad_clip)
+    fopt = flat_adam(train.learning_rate, train.beta1, train.beta2,
+                     train.eps, train.weight_decay, train.grad_clip)
+    flat_resident = fed.algorithm != "dpsgd"
+    if flat_local is None:
+        flat_local = jax.default_backend() != "cpu"
     # Partially unrolling the local-step scan lets XLA build larger fusion
-    # clusters (fewer per-op dispatches) without decode-time blowup.
-    local_unroll = max(1, min(2, fed.local_steps))
+    # clusters (fewer per-op dispatches) without decode-time blowup;
+    # unroll 4 measures ~10% over unroll 2 on the flat-resident loop
+    # (the slice-view/grad-pack ops of adjacent steps fuse).
+    local_unroll = max(1, min(4, fed.local_steps))
 
     def eta_fn(state: FedState) -> jax.Array:
         return topology.mixing_weights(adj, mix_rule,
@@ -157,50 +200,107 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 lambda l: jnp.broadcast_to(l, (k,) + l.shape).copy(), p0)
         else:
             params = jax.vmap(init_params_fn)(jax.random.split(rng, k))
-        opt_state = jax.vmap(opt.init)(params)
         ratios, sizes = _node_sketches(node_items, fed)
         tstate = ()
-        # pack the model for init_state only when the transport actually
-        # keeps state (e.g. gossip snapshots); unknown custom transports
-        # default to stateful
-        if uses_transport and getattr(transport, "stateful", True):
+        if flat_resident:
+            # ONE pack serves both the flat Adam moments and (when the
+            # transport keeps state, e.g. gossip snapshots) init_state
             buf, layout = flatten.flatten(params)
-            if fed.algorithm == "cdfa_m":
-                prefix = flatten.prefix_length(layout, fed.cdfa_fraction)
-                buf = buf[:, :prefix]
-            tstate = transport.init_state(buf)
+            opt_state = fopt.init(buf)
+            if uses_transport and getattr(transport, "stateful", True):
+                wire = buf
+                if fed.algorithm == "cdfa_m":
+                    prefix = flatten.prefix_length(layout,
+                                                   fed.cdfa_fraction)
+                    wire = buf[:, :prefix]
+                tstate = transport.init_state(wire)
+        else:
+            opt_state = jax.vmap(opt.init)(params)
         return FedState(params, opt_state, ratios, sizes,
                         jnp.zeros((), jnp.int32), tstate)
 
-    def local_updates(params, opt_state, batches):
+    def _flat_local_step(vec, ost, batch, layout):
+        """One local Adam step with params resident in the flat (P,)
+        vector: the forward/backward reads pytree slice VIEWS of the
+        buffer, the gradient pytree is flattened ONCE, and the fused
+        flat-Adam pass updates vector and moments in place."""
+        p = flatten.unflatten_one(vec, layout)
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        gvec = flatten.pack_node(grads, layout)
+        vec, ost = fopt.update(gvec, ost, vec)
+        return vec, ost, loss
+
+    def _leaf_local_step(p, o, batch):
+        """One leaf-space local Adam step (pytree params/moments)."""
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p, o = opt.update(grads, o, p)
+        return p, o, loss
+
+    # ONE loop scaffold serves both representations and both batch
+    # sources: step3(params_repr, opt_repr, batch) -> (..., loss).
+
+    def _run_local_steps(step3, p0, o0, batches):
         """vmap over nodes of a scan over local steps.
         batches: pytree, leaves (K, S, B, ...)."""
         def one_node(p, o, bs):
             def step(carry, batch):
-                pp, oo = carry
-                loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
-                pp, oo = opt.update(grads, oo, pp)
-                return (pp, oo), loss
+                p, o, loss = step3(*carry, batch)
+                return (p, o), loss
             (p, o), losses = jax.lax.scan(step, (p, o), bs,
                                           unroll=local_unroll)
             return p, o, losses.mean()
-        return jax.vmap(one_node)(params, opt_state, batches)
+        return jax.vmap(one_node)(p0, o0, batches)
 
-    def local_updates_from_idx(params, opt_state, data, idx):
-        """Like ``local_updates``, but gathers each minibatch on device
-        from the resident datasets one step at a time (idx: (K, S, B)) —
-        no (K, S, B, ...) round-batch intermediate is ever materialized."""
+    def _run_local_steps_from_idx(step3, p0, o0, data, idx):
+        """Like :func:`_run_local_steps`, but gathers each minibatch on
+        device from the resident datasets one step at a time
+        (idx: (K, S, B)) — no (K, S, B, ...) round-batch intermediate is
+        ever materialized."""
         def one_node(p, o, nd, ni):
             def step(carry, i):
-                pp, oo = carry
                 batch = jax.tree.map(lambda a: a[i], nd)
-                loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
-                pp, oo = opt.update(grads, oo, pp)
-                return (pp, oo), loss
+                p, o, loss = step3(*carry, batch)
+                return (p, o), loss
             (p, o), losses = jax.lax.scan(step, (p, o), ni,
                                           unroll=local_unroll)
             return p, o, losses.mean()
-        return jax.vmap(one_node)(params, opt_state, data, idx)
+        return jax.vmap(one_node)(p0, o0, data, idx)
+
+    def flat_local_updates(buf, opt_state, layout, batches):
+        return _run_local_steps(
+            lambda v, o, b: _flat_local_step(v, o, b, layout),
+            buf, opt_state, batches)
+
+    def flat_local_updates_from_idx(buf, opt_state, layout, data, idx):
+        return _run_local_steps_from_idx(
+            lambda v, o, b: _flat_local_step(v, o, b, layout),
+            buf, opt_state, data, idx)
+
+    # -- leaf-space local steps (the CPU lowering of the same pipeline) --
+    # The step loop carries pytree params/moments (XLA:CPU keeps leaves
+    # in gemm-preferred layouts and skips the per-step slice/pack
+    # traffic); conversion to/from the flat FedState representation
+    # happens ONCE at the loop boundary via unflatten/flatten — bit-the-
+    # same Adam arithmetic, just a different storage layout in flight.
+
+    def _leaf_opt_state(ost: FlatAdamState, layout):
+        from repro.optim.adam import AdamState
+        return AdamState(step=ost.step,
+                         m=flatten.unflatten(ost.m, layout, cast=False),
+                         v=flatten.unflatten(ost.v, layout, cast=False))
+
+    def _flat_opt_state(o, layout) -> FlatAdamState:
+        return FlatAdamState(step=o.step,
+                             m=flatten.flatten(o.m, layout)[0],
+                             v=flatten.flatten(o.v, layout)[0])
+
+    def leaf_local_updates(params, opt_state, batches):
+        return _run_local_steps(_leaf_local_step, params, opt_state,
+                                batches)
+
+    def leaf_local_updates_from_idx(params, opt_state, data, idx):
+        return _run_local_steps_from_idx(_leaf_local_step, params,
+                                         opt_state, data, idx)
 
     def mix_buf(buf, sizes, eta, gamma, layout, tstate, rnd):
         """The round's consensus exchange on the flat (K, P) buffer,
@@ -221,13 +321,6 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         # cdfl, cfa, metropolis — eq. (5)
         return transport.exchange(buf, eta, gamma, tstate, rnd)
 
-    def mix_params(state: FedState, eta, gamma):
-        """Pytree wrapper over :func:`mix_buf` (one pack/unpack)."""
-        buf, layout = flatten.flatten(state.params)
-        out, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
-                              state.tstate, state.round)
-        return flatten.unflatten(out, layout), tstate
-
     def _metrics(params, loss, gamma):
         metrics = {
             "loss": loss,                                   # (K,)
@@ -238,9 +331,29 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             metrics["eval"] = jax.vmap(eval_fn)(params)
         return metrics
 
+    def _flat_metrics(buf, layout, loss, gamma):
+        """Round metrics straight off the resident buffer — the
+        disagreement is one pass over (K, P), and eval reads the params
+        through slice views (no materialized unpack)."""
+        metrics = {
+            "loss": loss,
+            "disagreement": flatten.disagreement_flat(buf, layout.total),
+            "gamma": gamma,
+        }
+        if eval_fn is not None:
+            metrics["eval"] = jax.vmap(eval_fn)(
+                flatten.unflatten_views(buf, layout))
+        return metrics
+
     def round_body(state: FedState, batches, eta, gamma):
         """One full round given precomputed mixing weights. The consensus
-        exchange runs on the flat buffer (one fused (K,K)@(K,P) mix)."""
+        exchange runs on the flat buffer (one fused (K,K)@(K,P) mix).
+
+        NOTE: the per-round driver crosses the FedState boundary every
+        call, so with the leaf-space lowering (CPU) it converts the
+        flat moments to leaf space and back each round — unavoidable
+        per-call overhead that ``run_rounds`` hoists to the scan
+        boundary; multi-round work belongs on the scan driver."""
         if fed.algorithm == "dpsgd":
             # D-PSGD (Lian et al. 17): gossip-average every SGD step.
             # The per-step gossip mixes LEAF-WISE: packing the pytree
@@ -252,7 +365,7 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
 
             def mix_leaf(leaf):
                 flat = leaf.reshape(leaf.shape[0], -1)
-                return (a.astype(flat.dtype) @ flat).reshape(leaf.shape)
+                return flatten.matmul_nodes(a, flat).reshape(leaf.shape)
 
             def step(carry, batch):
                 p, o = carry
@@ -265,14 +378,31 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             (params, opt_state), losses = jax.lax.scan(
                 step, (state.params, state.opt), bt)
             loss = losses.mean() * jnp.ones((fed.num_nodes,))
-            tstate = state.tstate
-        else:
-            phi, tstate = mix_params(state, eta, gamma)
-            params, opt_state, loss = local_updates(phi, state.opt, batches)
+            new_state = FedState(params, opt_state, state.ratios,
+                                 state.sizes, state.round + 1, state.tstate)
+            return new_state, _metrics(params, loss, gamma)
 
-        new_state = FedState(params, opt_state, state.ratios, state.sizes,
+        # flat-resident round: ONE pack at entry, the mix and (with
+        # flat_local) the local Adam steps on the (K, P) buffer, ONE
+        # unpack into the returned FedState
+        layout = flatten.make_layout(state.params)
+        buf, _ = flatten.flatten(state.params, layout)
+        mixed, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
+                                state.tstate, state.round)
+        if flat_local:
+            buf, opt_state, loss = flat_local_updates(mixed, state.opt,
+                                                      layout, batches)
+        else:
+            params, o, loss = leaf_local_updates(
+                flatten.unflatten(mixed, layout),
+                _leaf_opt_state(state.opt, layout), batches)
+            buf = flatten.flatten(params, layout)[0]
+            opt_state = _flat_opt_state(o, layout)
+        metrics = _flat_metrics(buf, layout, loss, gamma)
+        new_state = FedState(flatten.unflatten(buf, layout), opt_state,
+                             state.ratios, state.sizes,
                              state.round + 1, tstate)
-        return new_state, _metrics(params, loss, gamma)
+        return new_state, metrics
 
     def _mixing(state: FedState):
         eta = eta_fn(state)
@@ -344,36 +474,42 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 return round_body(s, batches, eta_r, gamma_r)
             return jax.lax.scan(body, state, (idx, etas, gammas))
 
-        # The scan carries params as the FLAT (K, P) buffer: each round is
-        # mix (no pack needed) -> unpack once for the local steps -> pack
-        # once at the end, reused by both the disagreement metric and the
-        # next round's mix. The transport state (e.g. gossip snapshots)
-        # rides the same carry.
+        # The scan carry is flat end to end: the (K, P) param buffer,
+        # the Adam moments, and the transport state (e.g. gossip
+        # snapshots) — all donated. Params are packed ONCE before the
+        # scan and unpacked ONCE after it; the post-local-step
+        # write-back IS the buffer the next round's mix consumes (no
+        # per-round pack/unpack pass). With ``flat_local`` the moments
+        # ride the carry as (K, P) buffers and only the forward/
+        # backward reads pytree slice views; the CPU lowering instead
+        # carries the moments in leaf space (see build_trainer) —
+        # converted here ONCE at the scan boundary, never per round.
         layout = flatten.make_layout(state.params)
         buf0, _ = flatten.flatten(state.params, layout)
+        opt0 = (state.opt if flat_local
+                else _leaf_opt_state(state.opt, layout))
 
         def body(carry, xs):
             idx_r, eta_r, gamma_r = xs
             buf, opt_state, rnd, tstate = carry
             mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
                                     layout, tstate, rnd)
-            phi = flatten.unflatten(mixed, layout)
-            params, opt_state, loss = local_updates_from_idx(
-                phi, opt_state, data, idx_r)
-            new_buf, _ = flatten.flatten(params, layout)
-            metrics = {
-                "loss": loss,
-                "disagreement": flatten.disagreement_flat(new_buf,
-                                                          layout.total),
-                "gamma": gamma_r,
-            }
-            if eval_fn is not None:
-                metrics["eval"] = jax.vmap(eval_fn)(params)
-            return (new_buf, opt_state, rnd + 1, tstate), metrics
+            if flat_local:
+                buf, opt_state, loss = flat_local_updates_from_idx(
+                    mixed, opt_state, layout, data, idx_r)
+            else:
+                params, opt_state, loss = leaf_local_updates_from_idx(
+                    flatten.unflatten(mixed, layout), opt_state,
+                    data, idx_r)
+                buf = flatten.flatten(params, layout)[0]
+            metrics = _flat_metrics(buf, layout, loss, gamma_r)
+            return (buf, opt_state, rnd + 1, tstate), metrics
 
         (buf, opt_state, rnd, tstate), metrics = jax.lax.scan(
-            body, (buf0, state.opt, state.round, state.tstate),
+            body, (buf0, opt0, state.round, state.tstate),
             (idx, etas, gammas))
+        if not flat_local:
+            opt_state = _flat_opt_state(opt_state, layout)
         final = FedState(flatten.unflatten(buf, layout), opt_state,
                          state.ratios, state.sizes, rnd, tstate)
         return final, metrics

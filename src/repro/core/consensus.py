@@ -31,27 +31,21 @@ def apply_matrix(params, matrix: jax.Array):
     return flatten.unflatten(flatten.apply_matrix_flat(buf, matrix), layout)
 
 
-# One-shot dispatch cost model (CPU): the flat path pays ~2 extra full
-# passes over the packed buffer (pack + unpack); the per-leaf path pays a
-# fixed dispatch overhead per leaf. Per-leaf wins on multi-MB
-# cache-resident trees (see consensus_step_perleaf_xf74leaf in
-# BENCH_consensus.json); flat wins when leaves are many and small, or
-# when the buffer is already resident (run_rounds mixes the flat buffer
-# directly and never sees this heuristic).
-_PERLEAF_DISPATCH_US = 3.0
-_COPY_BYTES_PER_US = 5e3            # ~5 GB/s effective pack+unpack rate
-
-
+# One-shot dispatch (use_flat=None). Recalibrated for the single-pass
+# pack (PR 5): on CPU, PHYSICALLY materializing the (K, P) buffer for a
+# one-shot step never pays — pack + mix + unpack is >= 3 full passes of
+# XLA:CPU loop traffic against the per-leaf path's one — so the flat
+# engine itself lowers to a VIRTUAL buffer there (identical delta-form
+# math applied through the leaf views; see consensus_step) and the
+# remaining auto choice is between the two per-leaf forms: precomposed
+# operator (one pass per leaf — fastest, the seed form) vs. the
+# delta-form virtual mix (~2 passes, f32-cancellation-safe). Auto takes
+# the precomposed form on CPU and the physical fused kernel on
+# accelerators, where a single launch beats n_leaves dispatches.
 def _prefer_flat(params) -> bool:
-    # accelerators always want the single fused mix (per-leaf dispatch /
-    # kernel-launch overhead dominates there); the cost model below is
-    # CPU-specific
-    if jax.default_backend() != "cpu":
-        return True
-    leaves = jax.tree.leaves(params)
-    pack_bytes = 4 * sum(l.size for l in leaves)       # f32 buffer traffic
-    return (len(leaves) * _PERLEAF_DISPATCH_US
-            > 2 * pack_bytes / _COPY_BYTES_PER_US)
+    """Whether the one-shot auto dispatch routes through the flat
+    engine (True everywhere but CPU; see the cost note above)."""
+    return jax.default_backend() != "cpu"
 
 
 def _consensus_step_perleaf(params, eta, gamma, self_weight):
@@ -67,7 +61,31 @@ def _consensus_step_perleaf(params, eta, gamma, self_weight):
 
     def mix(leaf):
         flat = leaf.reshape(leaf.shape[0], -1)
-        return (a.astype(flat.dtype) @ flat).reshape(leaf.shape)
+        return flatten.matmul_nodes(a, flat).reshape(leaf.shape)
+
+    return jax.tree.map(mix, params)
+
+
+def _consensus_step_virtual_flat(params, eta, gamma, self_weight):
+    """The flat engine's delta-form mix (:func:`flatten.mix_flat`)
+    applied through leaf VIEWS of the logical buffer — every output
+    element sees exactly the arithmetic the physical (K, P) path would
+    apply to its buffer column, but nothing is materialized. This is
+    the flat path's CPU lowering: XLA:CPU turns a physical pack +
+    (K,K)@(K,P) + unpack composite into layout-conversion loops an
+    order of magnitude slower than the mix itself (see the
+    flatten_pack_* BENCH rows), while accelerators run the real buffer
+    through the fused Pallas kernel."""
+    eta32 = eta.astype(jnp.float32)
+    row = eta32.sum(axis=1)
+    g = jnp.asarray(gamma, jnp.float32)
+    sw = jnp.asarray(self_weight, jnp.float32)
+
+    def mix(leaf):
+        w = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        out = sw * w + g * (flatten.matmul_nodes(eta32, w)
+                            - row[:, None] * w)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
 
     return jax.tree.map(mix, params)
 
@@ -81,15 +99,20 @@ def consensus_step(params, eta: jax.Array, gamma: float,
     With self_weight=1 this is the standard consensus update; gamma must be
     in (0, 1/max_row_sum(eta)) (paper's bound) for stability.
 
-    ``use_flat=None`` dispatches adaptively: the fused flat-buffer mix
-    (:func:`repro.core.flatten.mix_flat`) on TPU or small many-leaf
-    trees, per-leaf einsums on large cache-resident CPU trees where
-    pack+unpack traffic dominates.
+    ``use_flat=True`` routes through the flat engine: the fused
+    (K,K)@(K,P) mix on a physical buffer on accelerators, the identical
+    delta-form arithmetic on leaf views (virtual buffer) on CPU — where
+    one-shot materialization is a measured pessimization.
+    ``use_flat=None`` dispatches adaptively (see :func:`_prefer_flat`);
+    ``use_flat=False`` forces the seed per-leaf precomposed form.
     """
     if use_flat is None:
         use_flat = _prefer_flat(params)
     if not use_flat:
         return _consensus_step_perleaf(params, eta, gamma, self_weight)
+    if jax.default_backend() == "cpu":
+        return _consensus_step_virtual_flat(params, eta, gamma,
+                                            self_weight)
     buf, layout = flatten.flatten(params)
     out = flatten.mix_flat(buf, eta, gamma, self_weight)
     return flatten.unflatten(out, layout)

@@ -72,40 +72,104 @@ def make_layout(params) -> FlatLayout:
                       num_nodes=k)
 
 
+# XLA:CPU lowers an n-ary concatenate into one fused stitch loop whose
+# throughput degrades sharply with operand count (and collapses
+# completely when cast/reshape producers fuse into it — measured 8x on
+# a 74-leaf tree, and 3x on a 4-leaf gradient pack fused into the
+# local-step loop); a chain of static dynamic_update_slice writes stays
+# at copy speed there. Accelerator backends vectorize wide concats
+# fine, so they get the true single-op pack.
+def _single_pass_pack(pieces, pad_shape):
+    """Pack pre-reshaped pieces along the trailing axis: one
+    concatenate on accelerator backends, an in-place
+    ``dynamic_update_slice`` chain on CPU (see note above).
+    ``pad_shape``: shape of the zero tail piece (trailing dim 0 to
+    skip it)."""
+    if pad_shape[-1]:
+        pieces = pieces + [jnp.zeros(pad_shape, jnp.float32)]
+    if len(pieces) == 1:
+        return pieces[0]
+    if jax.default_backend() != "cpu":
+        return jnp.concatenate(pieces, axis=-1)
+    width = sum(p.shape[-1] for p in pieces)
+    buf = jnp.zeros(pad_shape[:-1] + (width,), jnp.float32)
+    off = 0
+    for p in pieces:
+        buf = jax.lax.dynamic_update_slice(
+            buf, p, (0,) * (len(pad_shape) - 1) + (off,))
+        off += p.shape[-1]
+    return buf
+
+
 def flatten(params, layout: FlatLayout | None = None):
     """Pack a node-stacked pytree into a ``(K, P)`` float32 buffer.
 
     Returns ``(buf, layout)``. Tail padding is zero so reductions over
-    the buffer (disagreement, norms) are unaffected by it.
-
-    Each leaf is written into its slice with ``dynamic_update_slice``
-    rather than one wide n-ary concatenate — XLA parallelizes the
-    per-leaf copies but lowers a many-operand concat to a slow serial
-    stitch (~2.5x on a 74-leaf transformer tree).
+    the buffer (disagreement, norms) are unaffected by it. The pack is
+    a single pass over the pre-reshaped leaves (see
+    :func:`_single_pass_pack` for the backend-specific lowering).
     """
     if layout is None:
         layout = make_layout(params)
-    buf = jnp.zeros((layout.num_nodes, layout.padded), jnp.float32)
-    for leaf, off in zip(jax.tree.leaves(params), layout.offsets):
-        buf = jax.lax.dynamic_update_slice(
-            buf, leaf.reshape(layout.num_nodes, -1).astype(jnp.float32),
-            (0, off))
+    k = layout.num_nodes
+    pieces = [leaf.reshape(k, -1).astype(jnp.float32)
+              for leaf in jax.tree.leaves(params)]
+    buf = _single_pass_pack(pieces, (k, layout.padded - layout.total))
     return buf, layout
 
 
+def pack_node(tree, layout: FlatLayout) -> jax.Array:
+    """Pack ONE node's pytree (leaves with the layout's trailing shapes,
+    no K dim) into a lane-padded ``(P,)`` f32 vector, tail zero.
+
+    This is the per-local-step gradient pack of the flat-resident round
+    pipeline: inside the per-node vmapped local step the gradients come
+    back as a pytree and are flattened ONCE into the (P,) vector the
+    fused flat-Adam update consumes. Works with a shared K-node layout
+    (only the trailing shapes/offsets are read)."""
+    pieces = [leaf.reshape(-1).astype(jnp.float32)
+              for leaf in jax.tree.leaves(tree)]
+    return _single_pass_pack(pieces, (layout.padded - layout.total,))
+
+
+def _leaf_pieces(buf: jax.Array, layout: FlatLayout, cast: bool):
+    """Split the trailing buffer axis at the static leaf offsets (one
+    pass of ``jnp.split``), restore trailing shapes and (optionally)
+    dtypes. Leading buffer axes (the K dim, or none) pass through."""
+    lead = buf.shape[:-1]
+    splits = list(layout.offsets[1:])
+    if layout.padded > layout.total:
+        splits.append(layout.total)          # drop the zero tail piece
+    pieces = jnp.split(buf, splits, axis=-1)[:len(layout.sizes)]
+    leaves = []
+    for piece, shape, dtype in zip(pieces, layout.shapes, layout.dtypes):
+        piece = piece.reshape(lead + shape)
+        leaves.append(piece.astype(dtype) if cast else piece)
+    return leaves
+
+
 def unflatten(buf: jax.Array, layout: FlatLayout, cast: bool = True):
-    """Exact inverse of :func:`flatten`: restore shapes and dtypes.
+    """Exact inverse of :func:`flatten`: restore shapes and dtypes in a
+    single split pass over the buffer.
 
     ``cast=False`` keeps the buffer dtype (used for optimizer moments,
     which are always f32 regardless of the param dtypes the layout
     recorded)."""
-    leaves = []
-    for shape, dtype, off, size in zip(layout.shapes, layout.dtypes,
-                                       layout.offsets, layout.sizes):
-        piece = jax.lax.slice_in_dim(buf, off, off + size, axis=1)
-        piece = piece.reshape((layout.num_nodes,) + shape)
-        leaves.append(piece.astype(dtype) if cast else piece)
-    return jax.tree.unflatten(layout.treedef, leaves)
+    return jax.tree.unflatten(layout.treedef,
+                              _leaf_pieces(buf, layout, cast))
+
+
+def unflatten_views(buf: jax.Array, layout: FlatLayout):
+    """Leaf VIEWS of the buffer for in-jit consumers (the local-step
+    forward/backward of the flat-resident pipeline).
+
+    Same computation as :func:`unflatten` — the distinct name documents
+    INTENT: call this inside a jit'd closure, where XLA fuses each
+    slice into its consumer instead of materializing leaf copies (the
+    params never leave the flat buffer between rounds), and call
+    ``unflatten`` at API boundaries where a materialized pytree is the
+    point. Outside jit both materialize."""
+    return unflatten(buf, layout)
 
 
 def make_layout_one(params) -> FlatLayout:
@@ -130,14 +194,9 @@ def flatten_one(params, layout: FlatLayout | None = None):
 def unflatten_one(vec: jax.Array, layout: FlatLayout, cast: bool = True):
     """Single-node unpack: (P,) -> pytree with the trailing shapes (no K
     dim). Used inside per-node vmapped compute (loss/grad on one node's
-    slice of the flat buffer) — differentiating through it yields the
-    node's gradient already packed as a flat (P,) vector."""
-    leaves = []
-    for shape, dtype, off, size in zip(layout.shapes, layout.dtypes,
-                                       layout.offsets, layout.sizes):
-        piece = jax.lax.slice_in_dim(vec, off, off + size, axis=0)
-        piece = piece.reshape(shape)
-        leaves.append(piece.astype(dtype) if cast else piece)
+    slice of the flat buffer); like :func:`unflatten_views`, under jit
+    the slices fuse into the forward pass instead of copying."""
+    leaves = _leaf_pieces(vec, layout, cast)
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
@@ -170,14 +229,38 @@ def _use_kernel(use_kernel: bool | None, width: int) -> bool:
     return use_kernel
 
 
+# Above this node count the K-term broadcast-sum expansion of the
+# (K,K)@(K,P) mix stops paying for itself and the real matmul wins.
+_BSUM_MAX_NODES = 16
+
+
+def matmul_nodes(matrix: jax.Array, buf: jax.Array) -> jax.Array:
+    """``A @ BUF`` over the node axis, robust to XLA:CPU layout choices.
+
+    For the paper-scale node counts (K <= ~16) the matmul is expanded
+    into K broadcast-scaled row sums: pure elementwise work that fuses
+    with neighbors and never triggers the layout-conversion transpose
+    XLA:CPU inserts around a (K,K)@(K,P) ``dot`` composed with pack /
+    unpack (measured 6-20x on the composite one-shot step). Larger K
+    falls back to the real matmul (MXU/gemm-bound regime)."""
+    a = matrix.astype(buf.dtype)
+    k = buf.shape[0]
+    if k <= _BSUM_MAX_NODES:
+        return sum(a[:, i:i + 1] * buf[i] for i in range(k))
+    return jnp.einsum("ki,ip->kp", a, buf)
+
+
 def apply_matrix_flat(buf: jax.Array, matrix: jax.Array,
                       use_kernel: bool | None = None) -> jax.Array:
-    """``A @ BUF``: one (K,K)@(K,P) matmul applies any linear consensus
-    operator to every parameter of every node at once."""
+    """``A @ BUF``: one (K,K)@(K,P) operation applies any linear
+    consensus operator to every parameter of every node at once."""
     if _use_kernel(use_kernel, buf.shape[1]):
         from repro.kernels import ops
-        return ops.flat_consensus(matrix.astype(buf.dtype), buf)
-    return jnp.einsum("ki,ip->kp", matrix.astype(buf.dtype), buf)
+        # an EXPLICIT use_kernel=True off-TPU still runs the Pallas body
+        # (interpret mode — correctness tests); auto never does
+        return ops.flat_consensus(matrix.astype(buf.dtype), buf,
+                                  force_kernel=use_kernel is True)
+    return matmul_nodes(matrix, buf)
 
 
 def mix_flat(buf: jax.Array, eta: jax.Array, gamma,
@@ -206,15 +289,17 @@ def mix_flat(buf: jax.Array, eta: jax.Array, gamma,
         # the whole delta form (matmul + row-sum rescale + master add)
         # fuses into ONE Pallas pass; the wire slab is read at its wire
         # dtype and upcast in VMEM, so a bf16 wire halves neighbor-read
-        # bytes too.
+        # bytes too. Off TPU this kernel runs only on an EXPLICIT
+        # use_kernel=True (interpret-mode correctness tests).
         from repro.kernels import ops
-        out = ops.flat_mix(eta32, buf, w, g)
+        out = ops.flat_mix(eta32, buf, w, g,
+                           force_kernel=use_kernel is True)
         if self_weight == 1.0:
             return out
         return out + jnp.asarray(self_weight - 1.0, buf.dtype) * buf
     row = eta32.sum(axis=1)
     w32 = w.astype(buf.dtype)
-    mixed = jnp.einsum("ki,ip->kp", eta32, w32)
+    mixed = matmul_nodes(eta32, w32)
     out = g * (mixed - row[:, None] * w32)
     if self_weight == 1.0:
         return buf + out

@@ -158,27 +158,52 @@ class _FlatTransport:
         return self.codec.wire_bytes(layout)
 
 
-def _fused_wire(codec: WireCodec, buf: jax.Array):
+def _fused_wire(codec: WireCodec, buf: jax.Array,
+                simulate: bool = False):
     """The ``wire`` argument for :func:`flatten.mix_flat`: ``None`` for
     the identity codec, the raw cast for pure-cast codecs (the fused
-    kernel upcasts in VMEM), the decoded roundtrip otherwise."""
+    kernel upcasts in VMEM), the decoded roundtrip otherwise.
+
+    Pure-cast codecs are GATED to backends where the fused cast wins:
+    on TPU the kernel reads the half-width wire slab straight from HBM
+    (real byte savings), but in CPU simulation there is no wire — the
+    cast is two extra full passes over the buffer for nothing (BENCH:
+    dense bf16 1364 us vs f32 834 us), so it no-op-fuses to the f32
+    master. ``simulate=True`` forces the cast roundtrip anyway (wire
+    precision studies; bf16-drift tests). Roofline byte pricing always
+    reflects the codec, never this execution shortcut."""
     if codec.cast_dtype is not None:
-        if jnp.dtype(codec.cast_dtype) == buf.dtype:
+        if _cast_noops(codec, buf, simulate):
             return None
         return codec.encode(buf)
     return codec.roundtrip(buf)
 
 
+def _cast_noops(codec: WireCodec, buf: jax.Array, simulate: bool) -> bool:
+    """Whether a pure-cast codec's roundtrip is skipped for this
+    exchange: identity casts always; any cast on CPU simulation unless
+    the caller forces wire simulation (see :func:`_fused_wire`)."""
+    if codec.cast_dtype is None:
+        return False
+    if jnp.dtype(codec.cast_dtype) == buf.dtype:
+        return True
+    return jax.default_backend() == "cpu" and not simulate
+
+
 @dataclasses.dataclass(frozen=True)
 class DenseTransport(_FlatTransport):
     """Fused dense exchange: every node mixes every neighbor in one
-    ``(K,K)@(K,P)`` operation (the eta matrix encodes the topology)."""
+    ``(K,K)@(K,P)`` operation (the eta matrix encodes the topology).
+
+    ``simulate_wire`` forces the wire-dtype cast roundtrip on backends
+    where it would otherwise no-op-fuse (see :func:`_fused_wire`)."""
 
     wire_dtype: str = "f32"
     use_kernel: bool | None = None      # None -> auto (TPU)
+    simulate_wire: bool = False
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None):
-        wire = _fused_wire(self.codec, buf)
+        wire = _fused_wire(self.codec, buf, simulate=self.simulate_wire)
         out = flatten.mix_flat(buf, eta, gamma, use_kernel=self.use_kernel,
                                wire=wire)
         return out, state
@@ -194,10 +219,14 @@ class RingShardTransport(_FlatTransport):
     vector is ppermuted in ``shards`` chunks so the mix of chunk j
     overlaps the transfer of chunk j+1 (XLA async collective-permute).
     Simulation mode has no transfer to hide and ignores it.
+
+    ``simulate_wire``: as on :class:`DenseTransport` — pure-cast codecs
+    no-op-fuse in CPU simulation unless forced.
     """
 
     wire_dtype: str = "f32"
     shards: int = 1
+    simulate_wire: bool = False
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None):
         k = buf.shape[0]
@@ -208,6 +237,14 @@ class RingShardTransport(_FlatTransport):
         ep = eta32[idx, (idx - 1) % k][:, None]     # weight for k-1
         en = eta32[idx, (idx + 1) % k][:, None]     # weight for k+1
         codec = self.codec
+        if _cast_noops(codec, buf, self.simulate_wire):
+            w_self = buf
+            w_prev = jnp.roll(buf, 1, axis=0)
+            w_next = jnp.roll(buf, -1, axis=0)
+            g = jnp.asarray(gamma, buf.dtype)
+            out = buf + g * (ep * (w_prev - w_self)
+                             + en * (w_next - w_self))
+            return out, state
         enc = codec.encode(buf)
         # neighbor shifts apply to the ENCODED payload leaf-wise (side
         # information such as per-node scales shifts with its values)
@@ -229,8 +266,16 @@ class GossipTransport(_FlatTransport):
     ``staleness=0`` is stateless and bit-identical to
     :class:`DenseTransport`."""
 
+    # see DenseTransport. NOTE: with staleness > 0 the snapshot STATE is
+    # genuinely stored at wire size on every backend (a layout choice
+    # that must stay backend-independent for checkpoint portability), so
+    # the s > 0 exchange always pays the codec roundtrip; the documented
+    # "staleness -> 0 recovers the synchronous form term by term" holds
+    # exactly under simulate_wire=True (or on TPU), while the default
+    # CPU simulation runs the s = 0 case at f32.
     staleness: int = 0
     wire_dtype: str = "f32"
+    simulate_wire: bool = False
 
     @property
     def stateful(self) -> bool:
@@ -247,8 +292,8 @@ class GossipTransport(_FlatTransport):
     def exchange(self, buf, eta, gamma, state=(), rnd=None):
         codec = self.codec
         if self.staleness == 0:
-            return flatten.mix_flat(buf, eta, gamma,
-                                    wire=_fused_wire(codec, buf)), state
+            wire = _fused_wire(codec, buf, simulate=self.simulate_wire)
+            return flatten.mix_flat(buf, eta, gamma, wire=wire), state
         if rnd is None:
             raise ValueError("stale gossip needs the round index (rnd)")
         # slot r % s was last written at round r - s: exactly s rounds old
@@ -267,7 +312,7 @@ class GossipTransport(_FlatTransport):
         # CURRENT buffer at wire precision (so staleness->0 recovers the
         # synchronous delta form term by term)
         stale = codec.decode(stale_enc, buf.dtype)
-        mixed = jnp.einsum("ki,ip->kp", eta32, stale)
+        mixed = flatten.matmul_nodes(eta32, stale)
         w_self = codec.roundtrip(buf)
         out = buf + g * (mixed - row[:, None] * w_self)
         return out, new_state
@@ -279,7 +324,9 @@ class GossipTransport(_FlatTransport):
 
 @transports.register("dense")
 def _make_dense(fed) -> DenseTransport:
-    return DenseTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"))
+    return DenseTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"),
+                          simulate_wire=getattr(fed, "simulate_wire",
+                                                False))
 
 
 @transports.register("ring")
@@ -290,13 +337,17 @@ def _make_ring(fed) -> RingShardTransport:
         raise ValueError(
             f"ring transport moves data only between ring neighbors; "
             f"topology={fed.topology!r} needs the dense transport")
-    return RingShardTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"))
+    return RingShardTransport(wire_dtype=getattr(fed, "wire_dtype", "f32"),
+                              simulate_wire=getattr(fed, "simulate_wire",
+                                                    False))
 
 
 @transports.register("gossip")
 def _make_gossip(fed) -> GossipTransport:
     return GossipTransport(staleness=getattr(fed, "staleness", 0),
-                           wire_dtype=getattr(fed, "wire_dtype", "f32"))
+                           wire_dtype=getattr(fed, "wire_dtype", "f32"),
+                           simulate_wire=getattr(fed, "simulate_wire",
+                                                 False))
 
 
 # Back-compat view of the pre-registry tuple (iterates names).

@@ -1,8 +1,13 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``interpret`` is resolved automatically: TPU backends run the compiled
-kernels; CPU (this container, and any unit test) runs interpret mode,
-which executes the same kernel body in Python/XLA for correctness.
+TPU backends run the compiled kernels. Off TPU, the CONSENSUS wrappers
+(``consensus_mix``/``flat_consensus``/``flat_mix``) lower to the
+equivalent XLA form instead: Pallas interpret mode executes the kernel
+body op-by-op through Python/XLA and is ~10x slower than the einsum it
+replaces (BENCH ``consensus_mix_kernel_r2048``: 0.9 vs 7.8 MB/ms), so
+the kernel is NEVER auto-selected in interpret mode — interpret runs
+only when a caller forces it (``force_kernel=True``, used by the
+kernel-vs-XLA correctness tests and the kernel micro-bench rows).
 Higher layers call these, never pallas_call directly.
 """
 from __future__ import annotations
@@ -16,6 +21,13 @@ from repro.kernels import consensus_mix as _cm
 from repro.kernels import cnd_sketch as _cs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rwkv6_scan as _rs
+
+
+def use_pallas() -> bool:
+    """Whether the consensus wrappers dispatch to the Pallas kernels:
+    compiled-backend only — interpret mode is for explicit correctness
+    checks, never a default execution path."""
+    return jax.default_backend() == "tpu"
 
 
 def _interpret() -> bool:
@@ -42,30 +54,45 @@ def cnd_popcount(bitmaps):
     return _cs.cnd_popcount(bitmaps, interpret=_interpret())
 
 
-@partial(jax.jit, static_argnames=("block_rows",))
-def consensus_mix(w, neighbors, eta, gamma, block_rows: int = 256):
-    return _cm.consensus_mix(w, neighbors, eta, gamma,
-                             block_rows=block_rows, interpret=_interpret())
+@partial(jax.jit, static_argnames=("block_rows", "force_kernel"))
+def consensus_mix(w, neighbors, eta, gamma, block_rows: int = 256,
+                  force_kernel: bool = False):
+    if use_pallas() or force_kernel:
+        return _cm.consensus_mix(w, neighbors, eta, gamma,
+                                 block_rows=block_rows,
+                                 interpret=_interpret())
+    from repro.kernels import ref
+    return ref.consensus_mix(w, neighbors, eta, gamma)
 
 
-@jax.jit
-def flat_consensus(matrix, buf):
+@partial(jax.jit, static_argnames=("force_kernel",))
+def flat_consensus(matrix, buf, force_kernel: bool = False):
     """A @ BUF over the flat (K, P) parameter buffer in one kernel launch
-    (P is already lane-padded by repro.core.flatten)."""
-    block_cols = 512 if buf.shape[1] % 512 == 0 else 128
-    return _cm.flat_consensus(matrix, buf, block_cols=block_cols,
-                              interpret=_interpret())
+    (P is already lane-padded by repro.core.flatten); XLA matmul off
+    TPU."""
+    if use_pallas() or force_kernel:
+        block_cols = 512 if buf.shape[1] % 512 == 0 else 128
+        return _cm.flat_consensus(matrix, buf, block_cols=block_cols,
+                                  interpret=_interpret())
+    from repro.core import flatten
+    return flatten.matmul_nodes(matrix, buf)
 
 
-@jax.jit
-def flat_mix(eta, master, wire, gamma):
+@partial(jax.jit, static_argnames=("force_kernel",))
+def flat_mix(eta, master, wire, gamma, force_kernel: bool = False):
     """Fused eq.5 delta mix on the flat buffer (one kernel launch):
     OUT = MASTER + gamma * (ETA @ WIRE - rowsum(ETA) * WIRE). ``wire`` is
     the exchanged representation (master, a bf16 cast, or a stale gossip
-    snapshot); accumulation is always f32."""
-    block_cols = 512 if master.shape[1] % 512 == 0 else 128
-    return _cm.flat_mix(eta, master, wire, gamma, block_cols=block_cols,
-                        interpret=_interpret())
+    snapshot); accumulation is always f32. Off TPU this is the
+    equivalent XLA delta form, not the interpreted kernel."""
+    if use_pallas() or force_kernel:
+        block_cols = 512 if master.shape[1] % 512 == 0 else 128
+        return _cm.flat_mix(eta, master, wire, gamma,
+                            block_cols=block_cols, interpret=_interpret())
+    # one source of truth for the XLA delta form: flatten.mix_flat
+    from repro.core import flatten
+    return flatten.mix_flat(master, eta, gamma, use_kernel=False,
+                            wire=wire)
 
 
 def consensus_mix_pytree(params, neighbor_params, eta, gamma):

@@ -75,6 +75,10 @@ def main() -> None:
                          "consensus bytes (f32 master copy is kept)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="gossip bounded delay in rounds (0 = synchronous)")
+    ap.add_argument("--simulate-wire", action="store_true",
+                    help="force the wire-dtype cast roundtrip on backends "
+                         "where it would otherwise no-op-fuse (CPU "
+                         "simulation) — wire-precision studies")
     ap.add_argument("--mobility",
                     choices=("static",) + registry.mobility_traces.names(),
                     default="static",
@@ -108,12 +112,20 @@ def main() -> None:
             seed=args.mobility_seed, link_quality=args.link_quality)
 
     cfg = get_smoke_arch(args.arch)
+    import jax as _jax
+    if (args.wire_dtype != "f32" and not args.simulate_wire
+            and _jax.default_backend() == "cpu"):
+        print(f"note: wire_dtype={args.wire_dtype} no-op-fuses in CPU "
+              f"simulation (no physical wire; bytes below still priced "
+              f"at {args.wire_dtype}) — pass --simulate-wire to force "
+              f"the cast roundtrip for wire-precision studies")
+
     run_cfg = RunConfig(
         model=cfg,
         fed=FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
                       algorithm=args.algorithm, transport=args.transport,
                       wire_dtype=args.wire_dtype, staleness=args.staleness,
-                      mobility=mobility),
+                      simulate_wire=args.simulate_wire, mobility=mobility),
         train=TrainConfig(learning_rate=args.lr, batch_size=args.batch))
 
     # per-node synthetic corpora with injected duplicates (the paper's

@@ -1,2 +1,3 @@
-from repro.optim.adam import AdamState, Optimizer, adam, global_norm, sgd  # noqa: F401
+from repro.optim.adam import (AdamState, FlatAdamState, Optimizer,  # noqa: F401
+                              adam, flat_adam, global_norm, sgd)
 from repro.optim import schedules  # noqa: F401

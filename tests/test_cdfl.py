@@ -160,3 +160,159 @@ def test_run_rounds_with_eval_fn():
     accs = np.asarray(m["eval"])
     assert accs.shape == (10, 4)
     assert accs[-1].mean() > 0.9              # separable synthetic task
+
+
+# --- flat-resident Adam: parity against the pytree-Adam oracle --------------
+#
+# FedState carries the Adam moments as (K, P) buffers and (with
+# flat_local=True, the accelerator lowering, forced here so CPU CI
+# covers it) the local steps run entirely on the flat buffer. The
+# oracle below re-implements a round from primitives — transport
+# exchange on the flat buffer, then per-node pytree Adam — with the
+# scan driver's documented batch-sampling contract, and must agree to
+# <=1e-6 over 20 rounds for every transport and under a mobility stack.
+
+from repro.core import flatten, topology, transport as transport_lib
+from repro.core.cdfl import build_trainer
+from repro.configs.base import MobilityConfig
+from repro.optim import adam as make_adam
+
+
+def _oracle_run(fed, train_cfg, state, data, rounds, rng, etas, gammas,
+                trans):
+    """Pytree-Adam reference: flat mix via the transport, leaf-space
+    local steps, sampling keyed on the absolute round index."""
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    opt = make_adam(train_cfg.learning_rate, train_cfg.beta1,
+                    train_cfg.beta2, train_cfg.eps,
+                    train_cfg.weight_decay, train_cfg.grad_clip)
+    params = state.params
+    opt_state = jax.vmap(opt.init)(params)
+    layout = flatten.make_layout(params)
+    tstate = state.tstate
+    max_items = data["x"].shape[1]
+    k, s, b = fed.num_nodes, fed.local_steps, train_cfg.batch_size
+    for r in range(rounds):
+        key = jax.random.fold_in(rng, r)
+        idx = jax.random.randint(key, (k, s, b), 0, max_items)
+        buf, _ = flatten.flatten(params, layout)
+        buf, tstate = trans.exchange(buf, etas[r], gammas[r], tstate,
+                                     jnp.int32(r))
+        params = flatten.unflatten(buf, layout)
+
+        def one_node(p, o, nd, ni):
+            for t in range(s):
+                batch = jax.tree.map(lambda a: a[ni[t]], nd)
+                _, grads = jax.value_and_grad(loss)(p, batch)
+                p, o = opt.update(grads, o, p)
+            return p, o
+
+        ps, os_ = [], []
+        for i in range(k):
+            p_i = jax.tree.map(lambda l: l[i], params)
+            o_i = jax.tree.map(lambda l: l[i], opt_state)
+            p_i, o_i = one_node(p_i, o_i,
+                                jax.tree.map(lambda a: a[i], data),
+                                idx[i])
+            ps.append(p_i)
+            os_.append(o_i)
+        params = jax.tree.map(lambda *ls: jnp.stack(ls), *ps)
+        opt_state = jax.tree.map(lambda *ls: jnp.stack(ls), *os_)
+    return params, opt_state
+
+
+def _parity_setup(fed_kw, rounds=20, local_steps=2):
+    nodes = [synthetic.synthetic_mnist(seed=i, n=96) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 16, local_steps)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    fed = FedConfig(num_nodes=4, local_steps=local_steps, **fed_kw)
+    train_cfg = TrainConfig(learning_rate=1e-3, batch_size=16)
+    tr = build_trainer(lambda p, b: loss(p, b), fed, train_cfg,
+                       flat_local=True)
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    jnp.asarray(batcher.node_items()))
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    return fed, train_cfg, tr, state, data
+
+
+@pytest.mark.parametrize("fed_kw", [
+    {},
+    {"transport": "ring"},
+    {"transport": "gossip", "staleness": 2},
+], ids=["dense", "ring", "gossip_s2"])
+def test_flat_adam_matches_pytree_oracle_per_transport(fed_kw):
+    rounds, rng = 20, jax.random.PRNGKey(5)
+    fed, train_cfg, tr, state, data = _parity_setup(fed_kw)
+    trans = transport_lib.make_transport(fed)
+    eta = tr.eta_fn(state)
+    gamma = topology.stable_gamma(eta, fed.gamma)
+    etas = jnp.broadcast_to(eta, (rounds,) + eta.shape)
+    gammas = jnp.full((rounds,), gamma)
+    # oracle first: run_rounds DONATES its state buffers
+    exp_params, exp_opt = _oracle_run(fed, train_cfg, state, data,
+                                      rounds, rng, etas, gammas, trans)
+    final, _ = tr.run_rounds(state, data, rounds, rng=rng)
+    for a, b in zip(jax.tree.leaves(final.params),
+                    jax.tree.leaves(exp_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    # the flat (K, P) moments equal the oracle's pytree moments packed
+    layout = flatten.make_layout(exp_params)
+    exp_m, _ = flatten.flatten(exp_opt.m, layout)
+    exp_v, _ = flatten.flatten(exp_opt.v, layout)
+    np.testing.assert_allclose(np.asarray(final.opt.m), np.asarray(exp_m),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(final.opt.v), np.asarray(exp_v),
+                               atol=1e-6)
+    assert (np.asarray(final.opt.step) == rounds * fed.local_steps).all()
+
+
+def test_flat_adam_matches_pytree_oracle_under_mobility():
+    rounds, rng = 10, jax.random.PRNGKey(6)
+    mob = MobilityConfig(kind="platoon", speed=20.0, radio_range=250.0,
+                         seed=3)
+    fed, train_cfg, tr, state, data = _parity_setup({"mobility": mob})
+    etas, gammas = tr.mixing_stack(state, rounds)
+    trans = transport_lib.make_transport(fed)
+    exp_params, _ = _oracle_run(fed, train_cfg, state, data, rounds, rng,
+                                etas, gammas, trans)
+    final, _ = tr.run_rounds(state, data, rounds, rng=rng)
+    for a, b in zip(jax.tree.leaves(final.params),
+                    jax.tree.leaves(exp_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_flat_and_leaf_local_representations_agree():
+    """The accelerator lowering (flat_local=True: params/moments stay in
+    the (K, P) buffers through the step loop) and the CPU lowering
+    (leaf-space loop, scan-boundary conversion) are the same arithmetic
+    in a different storage layout — results must agree to fusion noise,
+    with identical flat moments in FedState either way."""
+    rounds, rng = 8, jax.random.PRNGKey(9)
+    results = []
+    for flat_local in (True, False):
+        nodes = [synthetic.synthetic_mnist(seed=i, n=96) for i in range(4)]
+        batcher = pipeline.FederatedBatcher(nodes, 16, 2)
+        loss = simple.make_mlp_loss(MLP_CONFIG)
+        tr = build_trainer(lambda p, b: loss(p, b),
+                           FedConfig(num_nodes=4, local_steps=2),
+                           TrainConfig(learning_rate=1e-3, batch_size=16),
+                           flat_local=flat_local)
+        state = tr.init(jax.random.PRNGKey(0),
+                        lambda r: simple.mlp_init(r, MLP_CONFIG),
+                        jnp.asarray(batcher.node_items()))
+        data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+                "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+        results.append(tr.run_rounds(state, data, rounds, rng=rng)[0])
+    a, b = results
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.opt.m), np.asarray(b.opt.m),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.opt.v), np.asarray(b.opt.v),
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.opt.step),
+                                  np.asarray(b.opt.step))

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import consensus, topology
+from repro.core import consensus, flatten, topology
 
 
 def _params(k=4, seed=0):
@@ -98,3 +98,64 @@ def test_gamma_zero_is_identity():
     out = consensus.consensus_step(params, eta, 0.0)
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(params["w"]), rtol=1e-6)
+
+
+# --- one-shot dispatch: recalibrated cost model (PR 5) ----------------------
+
+def test_flat_engine_virtual_path_matches_physical_buffer_path():
+    """On CPU the flat engine applies the delta-form mix through leaf
+    views instead of materializing the (K, P) buffer — same arithmetic,
+    so it must match an explicit pack -> mix_flat -> unpack to fusion
+    noise (and hence the per-leaf oracle within the usual 1e-5)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = {"a": jax.random.normal(ks[0], (4, 33, 5)),
+              "b": jax.random.normal(ks[1], (4, 7))}
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    out = consensus.consensus_step(params, eta, 0.4, use_flat=True)
+    buf, layout = flatten.flatten(params)
+    exp = flatten.unflatten(flatten.mix_flat(buf, eta, 0.4), layout)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_one_shot_auto_dispatch_tracks_best_path():
+    """Bench-derived regression for the adaptive dispatch: on the two
+    BENCH tree shapes (paper MLP, 74-leaf transformer-like) the auto
+    path must stay within 2.5x of the best explicit path — the 0.09x
+    collapse this PR fixed would trip this immediately. Generous bound:
+    CI boxes are noisy; the bug regime is 10x+."""
+    import time
+
+    def median_time(fn, *args, reps=5):
+        jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    mlp_shapes = [(784, 30), (30,), (30, 10), (10,)]
+    xf_shapes = []
+    for _ in range(12):
+        xf_shapes += [(128, 128), (128,), (128, 256), (256,),
+                      (256, 128), (128,)]
+    adj = jnp.asarray(topology.adjacency("ring", 4))
+    eta = topology.uniform_mixing(adj)
+    for shapes in (mlp_shapes, xf_shapes):
+        ks = jax.random.split(jax.random.PRNGKey(1), len(shapes))
+        params = {f"p{i:03d}": jax.random.normal(ks[i], (4,) + s)
+                  for i, s in enumerate(shapes)}
+        flat_fn = jax.jit(
+            lambda p: consensus.consensus_step(p, eta, 0.4, use_flat=True))
+        leaf_fn = jax.jit(
+            lambda p: consensus.consensus_step(p, eta, 0.4,
+                                               use_flat=False))
+        auto_fn = jax.jit(
+            lambda p: consensus.consensus_step(p, eta, 0.4))
+        best = min(median_time(flat_fn, params),
+                   median_time(leaf_fn, params))
+        auto = median_time(auto_fn, params)
+        assert auto < 2.5 * best + 1e-4, (auto, best)

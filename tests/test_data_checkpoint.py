@@ -94,3 +94,45 @@ def test_cnd_dedup_removes_duplicates_only():
     # deduped set has no feature-identical pairs
     assert redundancy.true_distinct_count(dedup.features) == \
         dedup.features.shape[0]
+
+
+def test_checkpoint_roundtrips_flat_adam_moments_exactly(tmp_path):
+    """FedState now stores the Adam moments as flat (K, P) buffers; a
+    save/restore cycle must reproduce them bit-for-bit (resume
+    exactness depends on it)."""
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines
+    from repro.models import simple
+    from repro.optim import FlatAdamState
+
+    nodes = [synthetic.synthetic_mnist(seed=i, n=64) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 16, 2)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    tr = baselines.cdfl(lambda p, b: loss(p, b),
+                        FedConfig(num_nodes=4, local_steps=2),
+                        TrainConfig(learning_rate=1e-3, batch_size=16))
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    jnp.asarray(batcher.node_items()))
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    state, _ = tr.run_rounds(state, data, 3)
+    assert isinstance(state.opt, FlatAdamState)
+    assert state.opt.m.ndim == 2                   # (K, P) flat moments
+    path = str(tmp_path / "flat_ckpt")
+    save(path, state, step=3)
+    # fresh template with zeroed moments: restore must refill exactly
+    tmpl = tr.init(jax.random.PRNGKey(1),
+                   lambda r: simple.mlp_init(r, MLP_CONFIG),
+                   jnp.asarray(batcher.node_items()))
+    back = restore(path, tmpl)
+    np.testing.assert_array_equal(np.asarray(back.opt.m),
+                                  np.asarray(state.opt.m))
+    np.testing.assert_array_equal(np.asarray(back.opt.v),
+                                  np.asarray(state.opt.v))
+    np.testing.assert_array_equal(np.asarray(back.opt.step),
+                                  np.asarray(state.opt.step))
+    for a, b in zip(jax.tree.leaves(back.params),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

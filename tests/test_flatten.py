@@ -192,6 +192,52 @@ def test_flat_consensus_kernel_matches_einsum():
     ks = jax.random.split(jax.random.PRNGKey(9), 2)
     buf = jax.random.normal(ks[0], (k, p))
     a = jax.nn.softmax(jax.random.normal(ks[1], (k, k)))
-    out = ops.flat_consensus(a, buf)
+    # force_kernel: exercise the Pallas body (interpret off TPU), not
+    # the XLA fallback the auto dispatch takes
+    out = ops.flat_consensus(a, buf, force_kernel=True)
     exp = jnp.einsum("ki,ip->kp", a, buf)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+# --- single-pass pack / views (flat-resident pipeline, PR 5) ----------------
+
+def test_unflatten_views_equals_unflatten():
+    params = _ragged_params(seed=11)
+    buf, layout = flatten.flatten(params)
+    views = flatten.unflatten_views(buf, layout)
+    exact = flatten.unflatten(buf, layout)
+    for a, b in zip(jax.tree.leaves(views), jax.tree.leaves(exact)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert (np.asarray(a, np.float32) == np.asarray(b,
+                                                        np.float32)).all()
+    # and under jit, where the views are slices fused into the consumer
+    jit_views = jax.jit(
+        lambda b: jax.tree.leaves(flatten.unflatten_views(b, layout)))
+    for a, b in zip(jit_views(buf), jax.tree.leaves(exact)):
+        assert (np.asarray(a, np.float32) == np.asarray(b,
+                                                        np.float32)).all()
+
+
+def test_pack_node_matches_flatten_row():
+    params = _ragged_params(seed=12)
+    buf, layout = flatten.flatten(params)
+    node2 = jax.tree.map(lambda l: l[2], params)
+    vec = flatten.pack_node(node2, layout)
+    np.testing.assert_array_equal(np.asarray(vec), np.asarray(buf[2]))
+    assert vec.shape == (layout.padded,)
+    # round-trip through the single-node unpack
+    back = flatten.unflatten_one(vec, layout)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(node2)):
+        assert (np.asarray(a, np.float32) == np.asarray(b,
+                                                        np.float32)).all()
+
+
+def test_matmul_nodes_matches_einsum_small_and_large_k():
+    for k in (4, flatten._BSUM_MAX_NODES + 3):   # bsum + einsum regimes
+        ks = jax.random.split(jax.random.PRNGKey(k), 2)
+        a = jax.nn.softmax(jax.random.normal(ks[0], (k, k)))
+        buf = jax.random.normal(ks[1], (k, 384))
+        out = flatten.matmul_nodes(a, buf)
+        exp = jnp.einsum("ki,ip->kp", a, buf)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-5)

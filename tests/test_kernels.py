@@ -158,3 +158,40 @@ def test_rwkv6_kernel_sweep(b, s, h, d, chunk):
                                atol=2e-3, rtol=2e-3)
     np.testing.assert_allclose(np.asarray(sf), np.asarray(se),
                                atol=2e-3, rtol=2e-3)
+
+
+# --- dispatch: the Pallas kernels are never auto-interpreted (PR 5) ---------
+
+def test_consensus_kernels_not_auto_selected_off_tpu(monkeypatch):
+    """Off TPU the public consensus wrappers must lower to XLA, not to
+    the interpreted Pallas body (~10x slower): poisoning the kernel
+    entry points must not affect an auto-dispatched call."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU dispatch behavior")
+    from repro.core import flatten as flatten_mod
+    from repro.kernels import consensus_mix as cm
+
+    assert not ops.use_pallas()
+
+    def boom(*a, **k):
+        raise AssertionError("Pallas kernel auto-selected off TPU")
+
+    monkeypatch.setattr(cm, "flat_mix", boom)
+    monkeypatch.setattr(cm, "flat_consensus", boom)
+    monkeypatch.setattr(cm, "consensus_mix", boom)
+
+    # fresh shapes so the poisoned modules are actually retraced
+    buf = jnp.ones((4, 640))
+    eta = jnp.full((4, 4), 0.25)
+    out = ops.flat_mix(eta, buf, buf, jnp.float32(0.3))
+    assert out.shape == buf.shape
+    out = ops.flat_consensus(eta, buf)
+    assert out.shape == buf.shape
+    w = jnp.ones((192, 128))
+    nb = jnp.ones((2, 192, 128))
+    out = ops.consensus_mix(w, nb, jnp.asarray([0.5, 0.5]),
+                            jnp.float32(0.5), block_rows=96)
+    assert out.shape == w.shape
+    # the default mix paths stay off the kernel too
+    _ = flatten_mod.mix_flat(buf, eta, 0.3)
+    _ = flatten_mod.apply_matrix_flat(buf, eta)

@@ -71,3 +71,90 @@ def test_sgd_momentum():
 def test_global_norm():
     t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
     assert float(global_norm(t)) == 5.0
+
+
+# --- flat-buffer Adam (flat-resident pipeline, PR 5) ------------------------
+
+def _tree_and_buf(seed=0):
+    from repro.core import flatten
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = {"w": jax.random.normal(ks[0], (4, 9, 3)),
+         "b": jax.random.normal(ks[1], (4, 5))}
+    buf, layout = flatten.flatten(p)
+    return p, buf, layout
+
+
+def test_flat_adam_matches_pytree_adam_elementwise():
+    from repro.core import flatten
+    from repro.optim import flat_adam
+    p, buf, layout = _tree_and_buf()
+    opt = adam(3e-3, 0.9, 0.999, 1e-7)
+    fopt = flat_adam(3e-3, 0.9, 0.999, 1e-7)
+    st = jax.vmap(opt.init)(p)
+    fst = fopt.init(buf)
+    assert fst.m.shape == buf.shape and fst.step.shape == (4,)
+    for t in range(1, 6):
+        g = jax.tree.map(
+            lambda l: jax.random.normal(jax.random.PRNGKey(100 + t),
+                                        l.shape), p)
+        gbuf, _ = flatten.flatten(g, layout)
+        p, st = jax.vmap(opt.update)(g, st, p)
+        buf, fst = jax.vmap(fopt.update)(gbuf, fst, buf)
+        exp, _ = flatten.flatten(p, layout)
+        np.testing.assert_allclose(np.asarray(buf), np.asarray(exp),
+                                   atol=1e-7)
+    exp_m, _ = flatten.flatten(st.m, layout)
+    np.testing.assert_allclose(np.asarray(fst.m), np.asarray(exp_m),
+                               atol=1e-7)
+    assert (np.asarray(fst.step) == 5).all()
+
+
+def test_flat_adam_grad_clip_is_per_node_under_vmap():
+    from repro.core import flatten
+    from repro.optim import flat_adam
+    p, buf, layout = _tree_and_buf(seed=1)
+    opt = adam(1e-2, grad_clip=1.0)
+    fopt = flat_adam(1e-2, grad_clip=1.0)
+    # one node with a huge gradient: only ITS update may be clipped
+    g = jax.tree.map(jnp.zeros_like, p)
+    g = {"w": g["w"].at[2].set(100.0), "b": g["b"]}
+    gbuf, _ = flatten.flatten(g, layout)
+    p2, _ = jax.vmap(opt.update)(g, jax.vmap(opt.init)(p), p)
+    buf2, _ = jax.vmap(fopt.update)(gbuf, fopt.init(buf), buf)
+    exp, _ = flatten.flatten(p2, layout)
+    np.testing.assert_allclose(np.asarray(buf2), np.asarray(exp),
+                               atol=1e-6)
+
+
+def test_flat_adam_weight_decay_and_padding_stay_zero():
+    from repro.core import flatten
+    from repro.optim import flat_adam
+    p, buf, layout = _tree_and_buf(seed=2)
+    assert layout.padded > layout.total          # test needs a real tail
+    fopt = flat_adam(1e-2, weight_decay=0.1)
+    fst = fopt.init(buf)
+    g = jnp.ones_like(buf).at[:, layout.total:].set(0.0)
+    for _ in range(3):
+        buf, fst = jax.vmap(fopt.update)(g, fst, buf)
+    # tail padding never moves: zero grads + zero params + zero decay
+    assert (np.asarray(buf[:, layout.total:]) == 0).all()
+    assert (np.asarray(fst.m[:, layout.total:]) == 0).all()
+
+
+def test_flat_adam_node_stacked_without_vmap_weight_decay():
+    """The documented non-vmapped (K, P) call must work with a constant
+    learning rate + weight_decay (regression: 0-d lr indexed with the
+    (K,)-shaped expander raised IndexError)."""
+    from repro.core import flatten
+    from repro.optim import flat_adam
+    p, buf, layout = _tree_and_buf(seed=3)
+    fopt = flat_adam(1e-2, weight_decay=0.1)
+    st = fopt.init(buf)
+    g = jnp.ones_like(buf)
+    out, st = fopt.update(g, st, buf)          # no vmap: (K, P) direct
+    assert out.shape == buf.shape
+    assert (np.asarray(st.step) == 1).all()
+    # matches the vmapped form (norms aside — no grad_clip here)
+    out_v, _ = jax.vmap(fopt.update)(g, fopt.init(buf), buf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_v),
+                               atol=1e-7)

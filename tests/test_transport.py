@@ -107,7 +107,11 @@ def test_bf16_wire_halves_bytes_and_bounds_drift_over_20_rounds():
     buf, layout = flatten.flatten(params)
     eta = _ring_eta()
     f32 = transport.DenseTransport()
-    b16 = transport.DenseTransport(wire_dtype="bf16")
+    # simulate_wire forces the bf16 cast roundtrip even on CPU, where
+    # the dense exchange otherwise no-op-fuses pure-cast codecs (there
+    # is no physical wire to save bytes on) — this test measures the
+    # wire-precision drift itself
+    b16 = transport.DenseTransport(wire_dtype="bf16", simulate_wire=True)
     assert b16.wire_bytes(layout) * 2 == f32.wire_bytes(layout)
     a, b = buf, buf
     for _ in range(20):
@@ -131,7 +135,10 @@ def test_flat_mix_kernel_matches_xla_delta_form():
     buf, _ = flatten.flatten(_mlp_like(seed=6))
     eta = _ring_eta()
     wire = buf.astype(jnp.bfloat16)
-    krn = ops.flat_mix(eta, buf, wire, jnp.float32(0.4))
+    # force_kernel: run the Pallas body (interpret mode off TPU) — the
+    # auto dispatch would give us the XLA form this test compares with
+    krn = ops.flat_mix(eta, buf, wire, jnp.float32(0.4),
+                       force_kernel=True)
     row = eta.sum(axis=1)
     w32 = wire.astype(jnp.float32)
     exp = buf + 0.4 * (jnp.einsum("ki,ip->kp", eta, w32)
@@ -220,13 +227,19 @@ def test_adaptive_consensus_step_paths_agree():
         np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
 
 
-def test_adaptive_dispatch_prefers_perleaf_on_big_cpu_trees():
+def test_adaptive_dispatch_never_packs_one_shot_on_cpu():
+    """Recalibrated for the single-pass pack (PR 5): a one-shot
+    consensus_step on CPU NEVER routes through a physically packed
+    buffer — pack+mix+unpack is >= 3 full loop passes against the
+    per-leaf path's one, regardless of leaf count/size (the flat engine
+    itself virtualizes the buffer there). Accelerators always take the
+    fused flat path."""
     if jax.default_backend() == "tpu":
         pytest.skip("CPU dispatch heuristic")
     big = {"w": jnp.ones((4, 1024, 1024))}          # 4 MB/node, 1 leaf
     many_small = {f"p{i}": jnp.ones((4, 8)) for i in range(64)}
     assert not consensus._prefer_flat(big)
-    assert consensus._prefer_flat(many_small)
+    assert not consensus._prefer_flat(many_small)
 
 
 # --- end-to-end: every backend through Trainer.run_rounds -------------------
@@ -368,3 +381,26 @@ def test_fed_ring_perms_matches_axis_derived():
     fwd, bwd = meshlib.fed_ring_perms(m)
     assert fwd == [(0, 1), (1, 2), (2, 3), (3, 0)]
     assert bwd == [(0, 3), (1, 0), (2, 1), (3, 2)]
+
+
+def test_simulate_wire_plumbs_from_fed_config():
+    """FedConfig(simulate_wire=True) must reach every transport factory
+    and force the real wire-dtype quantization even where the CPU
+    simulation would otherwise no-op-fuse the cast."""
+    for name in ("dense", "ring", "gossip"):
+        fed = FedConfig(transport=name, wire_dtype="bf16",
+                        simulate_wire=True)
+        assert transport.make_transport(fed).simulate_wire
+    buf, _ = flatten.flatten(_mlp_like(seed=13))
+    eta = _ring_eta()
+    sim = transport.DenseTransport(wire_dtype="bf16", simulate_wire=True)
+    out_sim, _ = sim.exchange(buf, eta, 0.4)
+    out_f32, _ = transport.DenseTransport().exchange(buf, eta, 0.4)
+    if jax.default_backend() == "cpu":
+        # default CPU simulation no-op-fuses the cast...
+        plain = transport.DenseTransport(wire_dtype="bf16")
+        out_plain, _ = plain.exchange(buf, eta, 0.4)
+        np.testing.assert_array_equal(np.asarray(out_plain),
+                                      np.asarray(out_f32))
+    # ...while simulate_wire really quantizes the exchanged terms
+    assert np.abs(np.asarray(out_sim) - np.asarray(out_f32)).max() > 0
