@@ -11,6 +11,7 @@ then this checker so schema breakage is caught pre-merge.
 from __future__ import annotations
 
 import json
+import re
 import sys
 
 REQUIRED_KEYS = {"name": str, "us_per_call": (int, float), "derived": str}
@@ -28,6 +29,7 @@ REQUIRED_FAMILIES = (
     "cdfl_",                # end-to-end round + scan rows
     "mobility_",            # eta-resample + churned-scan rows
     "rwkv6_",
+    "faults_",              # fault-injection scan + robust-agg rows
 )
 
 
@@ -71,9 +73,45 @@ def check(path: str) -> list[str]:
     return errors
 
 
+def _scan_flat_us_per_round(path: str) -> float | None:
+    """Per-round cost of the headline ``cdfl_<N>rounds_scan_flat`` row
+    (round count normalized away so --quick smoke rows compare against
+    the committed full-length baseline)."""
+    with open(path) as f:
+        rows = json.load(f)
+    for row in rows:
+        m = re.fullmatch(r"cdfl_(\d+)rounds_scan_flat", str(row.get("name")))
+        if m:
+            return float(row["us_per_call"]) / int(m.group(1))
+    return None
+
+
+def check_regression(path: str, baseline: str, factor: float = 4.0
+                     ) -> list[str]:
+    """Coarse perf guard: the fresh scan-flat per-round cost must stay
+    within ``factor``x of the committed baseline (generous — CI machines
+    vary — but catches an accidental per-round host sync or donation
+    loss, which costs an order of magnitude)."""
+    fresh = _scan_flat_us_per_round(path)
+    base = _scan_flat_us_per_round(baseline)
+    if fresh is None:
+        return [f"{path}: no cdfl_<N>rounds_scan_flat row to compare"]
+    if base is None:
+        return [f"{baseline}: no cdfl_<N>rounds_scan_flat baseline row"]
+    if fresh > base * factor:
+        return [f"cdfl scan-flat regression: {fresh:.0f} us/round vs "
+                f"baseline {base:.0f} us/round (> {factor:.1f}x)"]
+    return []
+
+
 def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_consensus.json"
+    argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+    path = argv[0] if argv else "BENCH_consensus.json"
     errors = check(path)
+    baseline = None
+    if "--baseline" in sys.argv:
+        baseline = sys.argv[sys.argv.index("--baseline") + 1]
+        errors += check_regression(path, baseline)
     if errors:
         print(f"BENCH schema check FAILED for {path}:")
         for e in errors:
@@ -81,7 +119,8 @@ def main() -> None:
         raise SystemExit(1)
     with open(path) as f:
         n = len(json.load(f))
-    print(f"BENCH schema ok: {n} rows in {path}")
+    extra = f" (scan-flat within bounds of {baseline})" if baseline else ""
+    print(f"BENCH schema ok: {n} rows in {path}{extra}")
 
 
 if __name__ == "__main__":

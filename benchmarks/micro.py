@@ -502,3 +502,73 @@ def bench_mobility(quick: bool = False):
                             f"{times['churned'] / times['static']:.2f}x "
                             f"vs static"})
     return rows
+
+
+def bench_faults(quick: bool = False):
+    """Fault subsystem cost: the in-scan injection + self-healing
+    machinery (wire build, guard, post-round freeze) riding the C-DFL
+    scan vs the bit-identical fault-free path, and the robust
+    (trimmed-mean) aggregation primitive on its own."""
+    from repro.configs.base import FaultConfig, FedConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines
+    from repro.data import pipeline, synthetic
+    from repro.faults.robust import sorted_weights
+    from repro.kernels.robust_agg import robust_agg_xla
+    from repro.models import simple
+
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 5
+    crash = FaultConfig(kinds=("crash",), crash_rate=0.1, recover_rate=0.3)
+    cocktail = FaultConfig(
+        kinds=("link_drop", "crash", "corrupt", "straggle", "byzantine"),
+        crash_rate=0.1, corrupt_rate=0.1, straggle_rate=0.2, byzantine=(1,))
+
+    nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 10)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    times = {}
+    for tag, faults in (("clean", None), ("crash", crash),
+                        ("cocktail", cocktail)):
+        tr = baselines.cdfl(lambda p, b: loss(p, b),
+                            FedConfig(num_nodes=4, local_steps=10,
+                                      faults=faults),
+                            TrainConfig(learning_rate=1e-3))
+        states = [tr.init(jax.random.PRNGKey(0),
+                          lambda r: simple.mlp_init(r, MLP_CONFIG),
+                          jnp.asarray(batcher.node_items()))
+                  for _ in range(1 + reps)]       # run_rounds donates
+
+        def run():
+            s, _ = tr.run_rounds(states.pop(), data, rounds,
+                                 rng=jax.random.PRNGKey(7))
+            return jax.tree.leaves(s.params)[0]
+
+        times[tag] = _median_time(run, reps=reps, warmup=1)
+    rows = [
+        {"name": f"faults_scan_crash_{rounds}r",
+         "us_per_call": times["crash"],
+         "derived": f"{times['crash'] / rounds:.0f} us/round; "
+                    f"{times['crash'] / times['clean']:.2f}x vs fault-free"},
+        {"name": f"faults_scan_cocktail_{rounds}r",
+         "us_per_call": times["cocktail"],
+         "derived": f"5 fault kinds + guard; "
+                    f"{times['cocktail'] / times['clean']:.2f}x "
+                    f"vs fault-free"},
+    ]
+
+    k, p = 8, 12800
+    rng = np.random.default_rng(0)
+    buf = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    sent = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    mask = jnp.asarray(rng.random((k, k)) < 0.6) | jnp.eye(k, dtype=bool)
+    w = sorted_weights(mask, "trimmed_mean", 1)
+    agg = jax.jit(robust_agg_xla)
+    us = _time(agg, w, mask, buf, sent)
+    rows.append({"name": f"faults_robust_agg_xla_k{k}",
+                 "us_per_call": us,
+                 "derived": f"trimmed-mean over (K={k}, P={p}) "
+                            f"neighbor rows (XLA sort path)"})
+    return rows

@@ -33,12 +33,26 @@ def _to_numpy(leaf) -> np.ndarray:
     return np.asarray(arr)
 
 
+def _replace_into(tmp: str, dst: str) -> None:
+    os.replace(tmp, dst)        # atomic on POSIX: readers see old XOR new
+
+
 def save(path: str, tree, step: int | None = None) -> None:
+    """Atomic checkpoint write: every file lands via temp + ``os.replace``,
+    arrays first and the manifest last, so the manifest acts as the commit
+    record — a crash mid-save leaves either the previous complete
+    checkpoint or stray ``.tmp`` files, never a torn one."""
     os.makedirs(path, exist_ok=True)
     leaves = _flatten_with_paths(tree)
     np_leaves = [(k, _to_numpy(l)) for k, l in leaves]
     arrays = {f"a{i}": arr for i, (_, arr) in enumerate(np_leaves)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    arrays_dst = os.path.join(path, "arrays.npz")
+    tmp = arrays_dst + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    _replace_into(tmp, arrays_dst)
     treedef = jax.tree.structure(tree)
     manifest = {
         "step": step,
@@ -47,8 +61,13 @@ def save(path: str, tree, step: int | None = None) -> None:
         "shapes": [list(arr.shape) for _, arr in np_leaves],
         "dtypes": [str(l.dtype) for _, l in leaves],
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    manifest_dst = os.path.join(path, "manifest.json")
+    tmp = manifest_dst + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _replace_into(tmp, manifest_dst)
 
 
 def restore(path: str, like):
@@ -60,8 +79,12 @@ def restore(path: str, like):
     n = len(manifest["keys"])
     if len(leaves_like) != n:
         raise ValueError(
-            f"checkpoint has {n} leaves, target structure has "
-            f"{len(leaves_like)}")
+            f"checkpoint layout mismatch: checkpoint has {n} leaves, "
+            f"target structure has {len(leaves_like)} "
+            f"(checkpoint treedef: {manifest['treedef']}; target treedef: "
+            f"{treedef}). The session's configs (algorithm, transport, "
+            f"faults, model) must match the ones the checkpoint was "
+            f"saved under.")
     new_leaves = []
     for i, ref in enumerate(leaves_like):
         arr = data[f"a{i}"]

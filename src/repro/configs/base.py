@@ -151,6 +151,64 @@ class MobilityConfig:
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection scenario: per-round link/node/wire failures.
+
+    ``kinds`` selects registered fault models (``repro.faults.models``);
+    each compiles — like a mobility trace — into host-side per-round
+    schedules that ride the round scan as device arrays, so fault
+    simulation adds zero per-round Python dispatch. All schedules are
+    deterministic in ``seed`` and independent of segmentation (resuming
+    at round r replays the same faults as an unbroken run).
+    """
+
+    kinds: Tuple[str, ...] = ()      # registered fault model names
+    seed: int = 0                    # fault RNG seed (decorrelated per kind)
+    # --- link_drop: i.i.d. undirected link erasures --------------------------
+    drop_rate: float = 0.1           # per-link per-round drop probability
+    # --- crash: per-node crash/recover Markov schedule -----------------------
+    crash_rate: float = 0.05         # P(alive -> crashed) per round
+    recover_rate: float = 0.3        # P(crashed -> alive) per round
+    # --- corrupt: wire payload corruption ------------------------------------
+    corrupt_rate: float = 0.05       # per-node per-round corruption prob
+    corrupt_mode: str = "nan"        # nan | inf | bitflip
+    # --- straggle: stale-buffer replay ---------------------------------------
+    straggle_rate: float = 0.1       # per-node per-round stale-send prob
+    # --- byzantine: adversarial senders --------------------------------------
+    byzantine: Tuple[int, ...] = ()  # attacker node indices
+    byzantine_mode: str = "sign_flip"  # sign_flip | scale
+    byzantine_scale: float = 10.0    # wire multiplier for mode="scale"
+    # wire guard: quarantine payloads with |value| above this (catches
+    # bit-flip noise that stays finite); 0 disables the magnitude check
+    guard_threshold: float = 1e12
+
+    def __post_init__(self):
+        from repro.registry import validate_fault_config
+        validate_fault_config(self)
+        if self.corrupt_mode not in ("nan", "inf", "bitflip"):
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r} "
+                             f"(choose from nan | inf | bitflip)")
+        if self.byzantine_mode not in ("sign_flip", "scale"):
+            raise ValueError(f"unknown byzantine_mode {self.byzantine_mode!r} "
+                             f"(choose from sign_flip | scale)")
+        for name in ("drop_rate", "crash_rate", "recover_rate",
+                     "corrupt_rate", "straggle_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if any(b < 0 for b in self.byzantine):
+            raise ValueError(f"byzantine node indices must be >= 0, "
+                             f"got {self.byzantine}")
+
+    @property
+    def active(self) -> bool:
+        """Whether any fault model is selected at all. Zero-rate kinds
+        are additionally detected host-side at plan compile time, so an
+        inactive config takes exactly the fault-free trainer path."""
+        return bool(self.kinds)
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """C-DFL hyperparameters (paper Alg. 2 / eqs. 5-8)."""
 
@@ -181,6 +239,16 @@ class FedConfig:
     # round scan. Otherwise per-round radio-range topologies drive a
     # time-varying (R, K, K) eta stack through Trainer.run_rounds.
     mobility: Optional[MobilityConfig] = None
+    # --- fault injection & robustness (repro.faults) -------------------------
+    # None: fault-free pipeline, bit-identical to pre-fault builds. A
+    # FaultConfig compiles into per-round link masks / health / wire
+    # schedules composed with the mobility stacks inside the scan.
+    faults: Optional[FaultConfig] = None
+    # Byzantine-robust aggregation replacing the eq. 5 weighted mix:
+    # None (paper mixing) or a registered robust rule name
+    # (trimmed_mean | median). Requires the dense transport.
+    robust: Optional[str] = None
+    trim: int = 1                    # values trimmed per tail (trimmed_mean)
 
     def __post_init__(self):
         # transport / wire_dtype / mixing / algorithm are plugin names;

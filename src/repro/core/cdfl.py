@@ -68,6 +68,8 @@ from repro import registry
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core import consensus, flatten, sketch, topology
 from repro.core import transport as transport_lib
+from repro.faults import models as faults_lib
+from repro.faults import robust as robust_lib
 from repro.optim import FlatAdamState, adam, flat_adam
 
 
@@ -79,6 +81,11 @@ class FedState(NamedTuple):
     sizes: jax.Array          # (K,) raw dataset sizes E_k
     round: jax.Array          # int32
     tstate: Any = ()          # transport state (e.g. gossip snapshots)
+    # fault-subsystem state: the previous round's entry buffer when a
+    # straggle schedule may replay it, else () — an empty pytree, so
+    # fault-free FedStates keep their pre-fault leaf layout (checkpoint
+    # compatibility both ways)
+    fstate: Any = ()
 
 
 class Trainer(NamedTuple):
@@ -147,6 +154,25 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
     uses_transport = spec.uses_transport
     mix_rule = spec.mixing
     mobile = fed.mobility is not None and fed.mobility.kind != "static"
+    # Fault injection / robust mixing operate on the once-per-round
+    # full-buffer wire exchange, which fedavg (server average), dpsgd
+    # (per-step leaf gossip) and cdfa_m (prefix-only wire) don't have.
+    fault_capable = uses_transport and fed.algorithm != "cdfa_m"
+    if fed.faults is not None and fed.faults.active and not fault_capable:
+        raise ValueError(
+            f"{fed.algorithm} has no full-buffer wire exchange to "
+            f"inject faults into (fault injection supports the "
+            f"transport-routed algorithms: cdfl, cfa, metropolis, ...)")
+    # ``faulty`` drives the trainer ASSEMBLY: a FaultConfig whose every
+    # selected kind has zero rate compiles to a guaranteed no-op, and
+    # the trainer then builds the exact fault-free graph (bit-identical
+    # runs) — the decision is config-static so every resumed segment of
+    # a run agrees on the scan-carry structure.
+    faulty = (fed.faults is not None
+              and faults_lib.config_active(fed.faults))
+    has_byz, has_corrupt, has_straggle = (
+        faults_lib.wire_kinds(fed.faults) if faulty
+        else (False, False, False))
     if mobile and fed.algorithm == "fedavg":
         # fedavg is the centralized reference: a server average has no
         # inter-vehicle links to churn
@@ -168,6 +194,21 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     f"leaf-wise gossip) — got transport={fed.transport}/"
                     f"{fed.wire_dtype}/staleness={fed.staleness}")
             transport = transport_lib.DenseTransport()
+    # Byzantine-robust mixing replaces the eq. 5 exchange with a
+    # coordinate-wise order statistic over neighbor rows — it needs
+    # every neighbor's payload materialized, which only the dense
+    # transport provides (ring shifts / gossip snapshots don't).
+    robust_fn = robust_lib.make_robust(fed)
+    if robust_fn is not None:
+        if not fault_capable:
+            raise ValueError(
+                f"{fed.algorithm} has no full-buffer wire exchange for "
+                f"robust aggregation to replace")
+        if not isinstance(transport, transport_lib.DenseTransport):
+            raise ValueError(
+                "robust aggregation needs every neighbor row "
+                "materialized: use the dense transport "
+                f"(got {type(transport).__name__})")
     # dpsgd mixes leaf-wise every SGD step, so it keeps the pytree Adam;
     # every other algorithm runs the flat-resident pipeline: params AND
     # Adam moments live in (K, P) FedState buffers, the consensus
@@ -202,6 +243,7 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             params = jax.vmap(init_params_fn)(jax.random.split(rng, k))
         ratios, sizes = _node_sketches(node_items, fed)
         tstate = ()
+        fstate = ()
         if flat_resident:
             # ONE pack serves both the flat Adam moments and (when the
             # transport keeps state, e.g. gossip snapshots) init_state
@@ -214,10 +256,15 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                                                    fed.cdfa_fraction)
                     wire = buf[:, :prefix]
                 tstate = transport.init_state(wire)
+            if has_straggle:
+                # a round-0 straggler replays the init broadcast; rides
+                # the FedState so checkpoint/resume replays the same
+                # stale payloads as an unbroken run
+                fstate = buf
         else:
             opt_state = jax.vmap(opt.init)(params)
         return FedState(params, opt_state, ratios, sizes,
-                        jnp.zeros((), jnp.int32), tstate)
+                        jnp.zeros((), jnp.int32), tstate, fstate)
 
     def _flat_local_step(vec, ost, batch, layout):
         """One local Adam step with params resident in the flat (P,)
@@ -302,9 +349,12 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return _run_local_steps_from_idx(_leaf_local_step, params,
                                          opt_state, data, idx)
 
-    def mix_buf(buf, sizes, eta, gamma, layout, tstate, rnd):
+    def mix_buf(buf, sizes, eta, gamma, layout, tstate, rnd, sent=None):
         """The round's consensus exchange on the flat (K, P) buffer,
-        routed through the selected transport. Returns (buf, tstate)."""
+        routed through the selected transport. ``sent`` (fault
+        injection) overrides the per-node wire payloads — ``None`` means
+        every node broadcasts its clean buffer, the fault-free path.
+        Returns (buf, tstate)."""
         if fed.algorithm == "fedavg":
             # centralized reference: server average, weights E_i/sum E —
             # not a decentralized exchange, so no transport
@@ -318,8 +368,17 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             head, tstate = transport.exchange(buf[:, :prefix], eta, gamma,
                                               tstate, rnd)
             return jnp.concatenate([head, buf[:, prefix:]], axis=1), tstate
+        if robust_fn is not None:
+            # order-statistic consensus over the neighborhood payloads
+            # (codec'd like any wire traffic) instead of eq. 5
+            payload = buf if sent is None else sent
+            codec = transport.codec
+            if not transport_lib._cast_noops(
+                    codec, buf, getattr(transport, "simulate_wire", False)):
+                payload = codec.roundtrip(payload)
+            return robust_fn(buf, payload, eta, gamma), tstate
         # cdfl, cfa, metropolis — eq. (5)
-        return transport.exchange(buf, eta, gamma, tstate, rnd)
+        return transport.exchange(buf, eta, gamma, tstate, rnd, sent=sent)
 
     def _metrics(params, loss, gamma):
         metrics = {
@@ -401,7 +460,7 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         metrics = _flat_metrics(buf, layout, loss, gamma)
         new_state = FedState(flatten.unflatten(buf, layout), opt_state,
                              state.ratios, state.sizes,
-                             state.round + 1, tstate)
+                             state.round + 1, tstate, state.fstate)
         return new_state, metrics
 
     def _mixing(state: FedState):
@@ -414,6 +473,11 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 "FedConfig.mobility is set but Trainer.round trains on "
                 "the frozen static graph — time-varying topologies ride "
                 "the run_rounds scan")
+        if faulty:
+            raise ValueError(
+                "FedConfig.faults is set but Trainer.round drives one "
+                "round at a time — fault schedules (and the in-scan "
+                "self-healing guard) ride the run_rounds scan")
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
 
@@ -437,11 +501,20 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             gamma_cap=fed.gamma, ratios=state.ratios, sizes=state.sizes,
             mask=mask, start=start)
 
+    def _freeze_rows(new, old, keep):
+        """Per-node where over a pytree whose every leaf has the node
+        axis leading: frozen nodes keep their round-entry values."""
+        return jax.tree.map(
+            lambda n, o: jnp.where(
+                keep.reshape((keep.shape[0],) + (1,) * (n.ndim - 1)),
+                n, o),
+            new, old)
+
     @partial(jax.jit, static_argnames=("num_rounds", "max_items"),
              donate_argnums=(0,))
     def _scan_rounds(state: FedState, data, round_keys: jax.Array,
                      num_rounds: int, max_items: int, node_sizes,
-                     etas, gammas):
+                     etas, gammas, fault_xs):
         # (R, K, S, B) minibatch indices for ALL rounds, sampled on
         # device from per-round keys folded on the ABSOLUTE round index
         # (run_rounds derives them) — segmenting a run cannot change
@@ -488,12 +561,42 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         buf0, _ = flatten.flatten(state.params, layout)
         opt0 = (state.opt if flat_local
                 else _leaf_opt_state(state.opt, layout))
+        # ``fault_xs`` is () on the fault-free path (the scan carry and
+        # body then trace to exactly the pre-fault graph) or the
+        # per-round (health, byz, corrupt, straggle) stacks — the
+        # structure is config-static, so every segment of a run agrees.
+        use_faults = fault_xs != ()
+        prev0 = ()
+        if use_faults and has_straggle:
+            prev0 = (buf0 if isinstance(state.fstate, tuple)
+                     else state.fstate)
 
         def body(carry, xs):
-            idx_r, eta_r, gamma_r = xs
-            buf, opt_state, rnd, tstate = carry
+            idx_r, eta_r, gamma_r, f_r = xs
+            buf, opt_state, rnd, tstate, prev = carry
+            entry_buf, entry_opt = buf, opt_state
+            sent = None
+            if use_faults:
+                health_r, byz_r, corrupt_r, straggle_r = f_r
+                # what each node puts on the wire this round: its fresh
+                # buffer, a straggler's stale replay, an attacker's
+                # flipped/scaled version, a corrupted frame — in that
+                # order (an attacker corrupts what it would have sent)
+                sent = buf
+                if has_straggle:
+                    sent = jnp.where(straggle_r[:, None] > 0, prev, sent)
+                if has_byz:
+                    sent = sent * byz_r[:, None]
+                if has_corrupt:
+                    sent = faults_lib.corrupt_rows(
+                        sent, corrupt_r, fed.faults.corrupt_mode)
+                # receive-side self-healing: drop non-finite / blown-up
+                # payloads (zero the sender's eta column, partition-safe
+                # renorm, scrub the rows) before anything mixes
+                sent, eta_r, quarantined = faults_lib.wire_guard(
+                    sent, buf, eta_r, fed.faults.guard_threshold)
             mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
-                                    layout, tstate, rnd)
+                                    layout, tstate, rnd, sent=sent)
             if flat_local:
                 buf, opt_state, loss = flat_local_updates_from_idx(
                     mixed, opt_state, layout, data, idx_r)
@@ -503,15 +606,33 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     data, idx_r)
                 buf = flatten.flatten(params, layout)[0]
             metrics = _flat_metrics(buf, layout, loss, gamma_r)
-            return (buf, opt_state, rnd + 1, tstate), metrics
+            if use_faults:
+                # post-round self-healing: crashed nodes freeze for the
+                # outage (their eta row/column was already zeroed at
+                # compile time, so the mix was a bit-exact self-update);
+                # nodes whose buffer went non-finite (local divergence
+                # on a poisoned mix) roll back to last-good values
+                finite = jnp.isfinite(buf).all(axis=1)
+                keep = (health_r > 0) & finite
+                buf = jnp.where(keep[:, None], buf, entry_buf)
+                opt_state = _freeze_rows(opt_state, entry_opt, keep)
+                metrics["health"] = health_r
+                metrics["quarantined"] = quarantined
+                metrics["frozen"] = ((health_r > 0) & ~finite).astype(
+                    jnp.float32)
+                if has_straggle:
+                    # next round's stale replay is THIS round's entry
+                    # buffer (what the node broadcast this round)
+                    prev = entry_buf
+            return (buf, opt_state, rnd + 1, tstate, prev), metrics
 
-        (buf, opt_state, rnd, tstate), metrics = jax.lax.scan(
-            body, (buf0, opt0, state.round, state.tstate),
-            (idx, etas, gammas))
+        (buf, opt_state, rnd, tstate, prev), metrics = jax.lax.scan(
+            body, (buf0, opt0, state.round, state.tstate, prev0),
+            (idx, etas, gammas, fault_xs))
         if not flat_local:
             opt_state = _flat_opt_state(opt_state, layout)
         final = FedState(flatten.unflatten(buf, layout), opt_state,
-                         state.ratios, state.sizes, rnd, tstate)
+                         state.ratios, state.sizes, rnd, tstate, prev)
         return final, metrics
 
     def run_rounds(state: FedState, data, num_rounds: int,
@@ -577,8 +698,23 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         if gammas.shape != (num_rounds,):
             raise ValueError(f"gamma stack shape {gammas.shape} != "
                              f"{(num_rounds,)}")
+        fault_xs = ()
+        if faulty:
+            from repro.mobility import mixing as mobility_mixing
+            # compile the fault schedules for THIS segment's absolute
+            # rounds (same slicing invariant as the kinematic trace) and
+            # fold the surviving-link mask into the eta stack host-side;
+            # rows only ever lose mass, so the gamma stability bound
+            # computed on the unmasked stack stays valid
+            plan = faults_lib.compile_plan(fed.faults, num_rounds, k,
+                                           start=start)
+            etas = mobility_mixing.masked_eta_stack(etas, plan.link_mask)
+            fault_xs = (jnp.asarray(plan.health),
+                        jnp.asarray(plan.byz),
+                        jnp.asarray(plan.corrupt),
+                        jnp.asarray(plan.straggle))
         return _scan_rounds(state, data, round_keys, num_rounds, max_items,
-                            n_items, etas, gammas)
+                            n_items, etas, gammas, fault_xs)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
                    run_rounds=run_rounds, mixing_stack=mixing_stack)

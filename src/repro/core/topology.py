@@ -127,6 +127,24 @@ def mixing_weights(adj: jnp.ndarray, rule: str,
     return mixing_policies.get(rule)(adj, ratios=ratios, sizes=sizes)
 
 
+def renormalize_rows(eta: jnp.ndarray,
+                     target_rows: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Redistribute each row's weight over its surviving entries.
+
+    After masking links out of an eta matrix (fault quarantine, crash
+    schedules) the surviving entries of row k are rescaled so the row
+    sums to ``target_rows[k]`` (default: 1). Fully-drained rows come out
+    all-zero — the partition-safe pure-self-update convention — never
+    NaN. Passing the pre-mask row sums as ``target_rows`` preserves each
+    row's original mass, which keeps sub-stochastic policies
+    (metropolis) sub-stochastic and leaves the stability bound
+    gamma < 1/∇ intact (row sums only ever shrink)."""
+    s = eta.sum(axis=1)
+    t = jnp.ones_like(s) if target_rows is None else target_rows
+    scale = jnp.where(s > 0, t / jnp.maximum(s, 1e-12), 0.0)
+    return eta * scale[:, None]
+
+
 def max_row_sum(eta: jnp.ndarray) -> jnp.ndarray:
     """∇ = max_k sum_i eta[k,i] — paper's bound: gamma in (0, 1/∇)."""
     return eta.sum(axis=1).max()

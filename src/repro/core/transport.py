@@ -202,10 +202,27 @@ class DenseTransport(_FlatTransport):
     use_kernel: bool | None = None      # None -> auto (TPU)
     simulate_wire: bool = False
 
-    def exchange(self, buf, eta, gamma, state=(), rnd=None):
-        wire = _fused_wire(self.codec, buf, simulate=self.simulate_wire)
-        out = flatten.mix_flat(buf, eta, gamma, use_kernel=self.use_kernel,
-                               wire=wire)
+    def exchange(self, buf, eta, gamma, state=(), rnd=None, sent=None):
+        if sent is None:
+            wire = _fused_wire(self.codec, buf, simulate=self.simulate_wire)
+            out = flatten.mix_flat(buf, eta, gamma,
+                                   use_kernel=self.use_kernel, wire=wire)
+            return out, state
+        # fault-injected exchange: per-node wire payloads (``sent``)
+        # diverge from the master buffer, so the neighbor terms read the
+        # codec'd payloads while the self-cancellation term keeps each
+        # node's OWN clean buffer (a node never receives itself).
+        codec = self.codec
+        if _cast_noops(codec, buf, self.simulate_wire):
+            w_nb, w_self = sent, buf
+        else:
+            w_nb = codec.roundtrip(sent)
+            w_self = codec.roundtrip(buf)
+        eta32 = eta.astype(buf.dtype)
+        row = eta32.sum(axis=1)
+        g = jnp.asarray(gamma, buf.dtype)
+        out = buf + g * (flatten.matmul_nodes(eta32, w_nb)
+                         - row[:, None] * w_self)
         return out, state
 
 
@@ -228,7 +245,7 @@ class RingShardTransport(_FlatTransport):
     shards: int = 1
     simulate_wire: bool = False
 
-    def exchange(self, buf, eta, gamma, state=(), rnd=None):
+    def exchange(self, buf, eta, gamma, state=(), rnd=None, sent=None):
         k = buf.shape[0]
         if k < 3:
             raise ValueError(f"ring transport needs K >= 3 nodes, got {k}")
@@ -236,19 +253,22 @@ class RingShardTransport(_FlatTransport):
         eta32 = eta.astype(buf.dtype)
         ep = eta32[idx, (idx - 1) % k][:, None]     # weight for k-1
         en = eta32[idx, (idx + 1) % k][:, None]     # weight for k+1
+        # fault injection swaps the payload the ring shifts move (the
+        # self-cancellation term stays the node's own clean buffer)
+        src = buf if sent is None else sent
         codec = self.codec
         if _cast_noops(codec, buf, self.simulate_wire):
             w_self = buf
-            w_prev = jnp.roll(buf, 1, axis=0)
-            w_next = jnp.roll(buf, -1, axis=0)
+            w_prev = jnp.roll(src, 1, axis=0)
+            w_next = jnp.roll(src, -1, axis=0)
             g = jnp.asarray(gamma, buf.dtype)
             out = buf + g * (ep * (w_prev - w_self)
                              + en * (w_next - w_self))
             return out, state
-        enc = codec.encode(buf)
+        enc = codec.encode(src)
         # neighbor shifts apply to the ENCODED payload leaf-wise (side
         # information such as per-node scales shifts with its values)
-        w_self = codec.decode(enc, buf.dtype)
+        w_self = codec.roundtrip(buf)
         w_prev = codec.decode(
             jax.tree.map(lambda a: jnp.roll(a, 1, axis=0), enc), buf.dtype)
         w_next = codec.decode(
@@ -289,11 +309,23 @@ class GossipTransport(_FlatTransport):
                 a[None], (self.staleness,) + a.shape).copy(),
             self.codec.encode(buf))
 
-    def exchange(self, buf, eta, gamma, state=(), rnd=None):
+    def exchange(self, buf, eta, gamma, state=(), rnd=None, sent=None):
         codec = self.codec
         if self.staleness == 0:
-            wire = _fused_wire(codec, buf, simulate=self.simulate_wire)
-            return flatten.mix_flat(buf, eta, gamma, wire=wire), state
+            if sent is None:
+                wire = _fused_wire(codec, buf, simulate=self.simulate_wire)
+                return flatten.mix_flat(buf, eta, gamma, wire=wire), state
+            if _cast_noops(codec, buf, self.simulate_wire):
+                w_nb, w_self = sent, buf
+            else:
+                w_nb = codec.roundtrip(sent)
+                w_self = codec.roundtrip(buf)
+            eta32 = eta.astype(buf.dtype)
+            row = eta32.sum(axis=1)
+            g = jnp.asarray(gamma, buf.dtype)
+            out = buf + g * (flatten.matmul_nodes(eta32, w_nb)
+                             - row[:, None] * w_self)
+            return out, state
         if rnd is None:
             raise ValueError("stale gossip needs the round index (rnd)")
         # slot r % s was last written at round r - s: exactly s rounds old
@@ -301,10 +333,14 @@ class GossipTransport(_FlatTransport):
         stale_enc = jax.tree.map(
             lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0,
                                                    keepdims=False), state)
+        # fault injection snapshots the (guard-scrubbed) wire payload —
+        # poisoned rows were already replaced by the sender's clean
+        # buffer upstream (the retransmission model), so the snapshot
+        # ring never stores NaN/Inf for a stale round to replay
         new_state = jax.tree.map(
             lambda a, fresh: jax.lax.dynamic_update_index_in_dim(
                 a, fresh[None], slot, 0),
-            state, codec.encode(buf))
+            state, codec.encode(buf if sent is None else sent))
         eta32 = eta.astype(buf.dtype)
         row = eta32.sum(axis=1)
         g = jnp.asarray(gamma, buf.dtype)

@@ -58,6 +58,7 @@ from repro.core.cdfl import FedState, Trainer, build_trainer
 __all__ = [
     "Experiment", "Session", "RunResult",
     "Callback", "EvalCallback", "CheckpointCallback", "ChurnLogCallback",
+    "HealthCallback",
 ]
 
 
@@ -150,6 +151,29 @@ class ChurnLogCallback(Callback):
             f"{stats['handovers']} handovers, "
             f"{stats['partitioned_rounds']}/{stats['rounds']} "
             f"partitioned rounds")
+
+
+class HealthCallback(Callback):
+    """Summarize the fault-injection telemetry the scan emits when
+    ``fed.faults`` is active (``health`` / ``quarantined`` / ``frozen``
+    per-round ``(R, K)`` stacks in ``result.metrics``): one greppable
+    line per run with crashed node-rounds, quarantined payloads, and
+    frozen (self-healed) buffer-rounds. No-op on fault-free runs."""
+
+    def __init__(self, print_fn: Callable[[str], None] = print):
+        self.print_fn = print_fn
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        if "health" not in result.metrics:
+            return
+        health = np.asarray(result.metrics["health"])
+        crashed = int((1.0 - health).sum())
+        quarantined = int(np.asarray(result.metrics["quarantined"]).sum())
+        frozen = int(np.asarray(result.metrics["frozen"]).sum())
+        self.print_fn(
+            f"health: rounds={result.rounds} nodes={health.shape[1]} "
+            f"crashed_node_rounds={crashed} quarantined={quarantined} "
+            f"frozen={frozen}")
 
 
 # --------------------------------------------------------------------------
@@ -404,8 +428,17 @@ class Session:
         :class:`CheckpointCallback`) into this session and continue the
         SAME run: the restored round counter keys batch sampling and the
         mobility trace, so resumed rounds reproduce an unsegmented run
-        exactly. Returns ``self`` for chaining."""
-        self._state = _ckpt_restore(path, self._state)
+        exactly (fault schedules included: they are compiled from round 0
+        and sliced at the restored round). Returns ``self`` for
+        chaining."""
+        try:
+            self._state = _ckpt_restore(path, self._state)
+        except Exception as e:
+            raise ValueError(
+                f"cannot resume from {path!r}: checkpoint does not match "
+                f"this session's state layout (was it saved under a "
+                f"different algorithm/transport/fault config or model "
+                f"size, or is it corrupt?): {e}") from e
         return self
 
 

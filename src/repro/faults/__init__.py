@@ -1,0 +1,35 @@
+"""Fault injection & self-healing consensus (robustness layer).
+
+The paper removes the server as a single point of failure; this package
+removes the remaining idealizations — cooperative, crash-free,
+numerically healthy vehicles. It mirrors the mobility subsystem's
+compile-once design:
+
+* :mod:`repro.faults.models` — registered fault models (link_drop,
+  crash, corrupt, straggle, byzantine) compiled host-side by
+  :func:`compile_plan` into a :class:`FaultPlan` of per-round numpy
+  schedules: an ``(R, K, K)`` link mask composed into the eta stacks
+  and ``(R, K)`` node-health / wire-behavior stacks that ride the round
+  scan as device arrays (zero per-round Python dispatch);
+* :mod:`repro.faults.robust` — Byzantine-robust aggregation plugins
+  (coordinate-wise trimmed-mean / median over neighbor rows) replacing
+  the eq. 5 weighted mix, with a Pallas row-reduction kernel on TPU and
+  an XLA sort-based fallback elsewhere;
+* in-scan self-healing lives in :func:`repro.faults.models.wire_guard`
+  (quarantine non-finite / blown-up payloads: zero the sender's eta
+  column, partition-safe renorm, scrub the poisoned rows) — the trainer
+  pairs it with a post-round freeze of non-finite buffers to last-good
+  values and per-round health telemetry in ``RunResult.metrics``.
+"""
+from repro.faults.models import (  # noqa: F401
+    FaultPlan,
+    compile_plan,
+    config_active,
+    corrupt_rows,
+    wire_guard,
+    wire_kinds,
+)
+from repro.faults.robust import (  # noqa: F401
+    make_robust,
+    robust_exchange,
+)

@@ -1,0 +1,103 @@
+"""Byzantine-robust mixing plugins: trimmed-mean and median consensus.
+
+The eq. 5 mix is a fixed convex combination — one adversarial neighbor
+broadcasting ``-W`` (sign flip) or ``c * W`` pulls every honest node
+off the consensus manifold forever, because the weighted mean has a
+breakdown point of zero. Coordinate-wise order statistics fix that:
+each node sorts, per parameter, the payloads of its neighborhood (own
+value included) and takes
+
+* ``trimmed_mean`` — the mean of the values with the ``trim`` largest
+  and ``trim`` smallest discarded (falls back to the plain masked mean
+  when the neighborhood is too small to trim, i.e. ``count <= 2*trim``);
+* ``median``       — the middle value (mean of the two middles for even
+  counts).
+
+The trade-off vs. eq. 5: robust rules ignore the eta VALUES (CND
+redundancy / datasize weighting degrades to uniform trust over the
+neighborhood support) and the consensus step becomes nonlinear, so the
+paper's linear convergence analysis no longer applies — in exchange a
+minority of arbitrarily-behaved senders per neighborhood is tolerated.
+
+Registered in :data:`repro.registry.robust_rules` as factories
+``fed -> exchange(buf, sent, eta, gamma) -> buf`` so ``FedConfig(
+robust="trimmed_mean")`` swaps the mixing without touching the trainer.
+Requires the dense transport: order statistics need every neighbor row
+materialized, which ring shifts / gossip snapshots do not provide.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.registry import robust_rules
+
+
+def sorted_weights(mask: jnp.ndarray, mode: str, trim: int) -> jnp.ndarray:
+    """(K, K) position-weight matrix addressing each row's SORTED
+    candidate values (ascending, masked slots padded to +inf so they
+    land past position ``count-1``).
+
+    Row k has ``c = mask[k].sum()`` live candidates. ``median`` puts
+    0.5/0.5 on the middle pair (twice 0.5 on the same slot for odd c);
+    ``trimmed_mean`` spreads 1/(c-2t) over positions [t, c-t) with
+    ``t = trim`` when c > 2*trim else 0 (plain mean fallback). Empty
+    rows (c = 0) get all-zero weights — the caller's partition-safe
+    no-op.
+    """
+    k = mask.shape[0]
+    c = mask.sum(axis=1).astype(jnp.int32)[:, None]        # (K, 1)
+    j = jnp.arange(k, dtype=jnp.int32)[None, :]            # (1, K)
+    if mode == "median":
+        w = 0.5 * ((j == (c - 1) // 2).astype(jnp.float32)
+                   + (j == c // 2).astype(jnp.float32))
+    elif mode == "trimmed_mean":
+        t = jnp.where(c > 2 * trim, trim, 0)
+        inside = (j >= t) & (j < c - t)
+        w = inside.astype(jnp.float32) / jnp.maximum(c - 2 * t, 1)
+    else:
+        raise ValueError(f"unknown robust mode {mode!r}")
+    return jnp.where(c > 0, w, 0.0)
+
+
+def robust_exchange(buf, sent, eta, gamma, *, mode: str, trim: int = 1,
+                    force_kernel: bool = False):
+    """One robust consensus step on the flat (K, P) buffer:
+
+        OUT_k = BUF_k + gamma * (agg_k - BUF_k)
+
+    with ``agg_k`` the coordinate-wise ``mode`` statistic over node k's
+    neighborhood support ``{i : eta[k,i] > 0} ∪ {k}`` — sender payloads
+    from ``sent`` (post wire-guard), k's own slot from its clean local
+    buffer. Nodes with no live neighbors keep BUF bit-exactly (pure
+    self-update, the partition convention)."""
+    from repro.kernels import ops
+
+    k = buf.shape[0]
+    mask = ((eta > 0) | jnp.eye(k, dtype=bool)).astype(jnp.float32)
+    weights = sorted_weights(mask, mode, trim)
+    agg = ops.robust_agg(weights, mask, buf, sent, force_kernel=force_kernel)
+    has_nb = (eta.sum(axis=1) > 0).astype(buf.dtype)[:, None]
+    return buf + jnp.asarray(gamma, buf.dtype) * has_nb * (agg - buf)
+
+
+def make_robust(fed):
+    """Resolve ``fed.robust`` to an ``exchange(buf, sent, eta, gamma)``
+    callable via the registry (None -> None: paper mixing)."""
+    if getattr(fed, "robust", None) is None:
+        return None
+    return robust_rules.get(fed.robust)(fed)
+
+
+@robust_rules.register("trimmed_mean")
+def _make_trimmed_mean(fed):
+    trim = int(getattr(fed, "trim", 1))
+    if trim < 0:
+        raise ValueError(f"trim must be >= 0, got {trim}")
+    return functools.partial(robust_exchange, mode="trimmed_mean", trim=trim)
+
+
+@robust_rules.register("median")
+def _make_median(fed):
+    return functools.partial(robust_exchange, mode="median", trim=0)

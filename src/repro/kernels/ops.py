@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import consensus_mix as _cm
 from repro.kernels import cnd_sketch as _cs
 from repro.kernels import flash_attention as _fa
+from repro.kernels import robust_agg as _ra
 from repro.kernels import rwkv6_scan as _rs
 
 
@@ -93,6 +94,19 @@ def flat_mix(eta, master, wire, gamma, force_kernel: bool = False):
     from repro.core import flatten
     return flatten.mix_flat(master, eta, gamma, use_kernel=False,
                             wire=wire)
+
+
+@partial(jax.jit, static_argnames=("force_kernel",))
+def robust_agg(weights, mask, buf, sent, force_kernel: bool = False):
+    """Coordinate-wise robust neighbor aggregation (trimmed-mean /
+    median position weights) over the flat (K, P) buffer: the
+    Byzantine-robust replacement for the eq. 5 mix. Pallas row-reduction
+    kernel on TPU, sort-based XLA fallback elsewhere."""
+    if use_pallas() or force_kernel:
+        block_cols = 512 if buf.shape[1] % 512 == 0 else 128
+        return _ra.robust_agg(weights, mask, buf, sent,
+                              block_cols=block_cols, interpret=_interpret())
+    return _ra.robust_agg_xla(weights, mask, buf, sent)
 
 
 def consensus_mix_pytree(params, neighbor_params, eta, gamma):

@@ -35,11 +35,11 @@ import numpy as np
 
 from repro import registry
 from repro.checkpointing import save
-from repro.configs.base import (FedConfig, MobilityConfig, RunConfig,
-                                TrainConfig)
+from repro.configs.base import (FaultConfig, FedConfig, MobilityConfig,
+                                RunConfig, TrainConfig)
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.data import pipeline, redundancy, synthetic
-from repro.experiment import ChurnLogCallback, Experiment
+from repro.experiment import ChurnLogCallback, Experiment, HealthCallback
 from repro.mobility.links import LINK_QUALITIES
 
 
@@ -98,8 +98,56 @@ def main() -> None:
                     default="binary",
                     help="link weighting: binary unit-disk or quadratic "
                          "distance-faded quality")
+    ap.add_argument("--faults", default=None,
+                    help="comma-separated fault kinds to inject "
+                         f"({','.join(registry.fault_models.names())}); "
+                         "compiled into per-round schedules riding the "
+                         "scan — needs --driver scan")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault-schedule RNG seed (deterministic per seed)")
+    ap.add_argument("--drop-rate", type=float, default=0.1,
+                    help="per-round symmetric link-erasure probability")
+    ap.add_argument("--crash-rate", type=float, default=0.1,
+                    help="per-round node crash probability (Markov)")
+    ap.add_argument("--recover-rate", type=float, default=0.3,
+                    help="per-round crashed-node recovery probability")
+    ap.add_argument("--corrupt-rate", type=float, default=0.05,
+                    help="per-round wire-payload corruption probability")
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=("nan", "inf", "bitflip"))
+    ap.add_argument("--straggle-rate", type=float, default=0.1,
+                    help="per-round stale-buffer replay probability")
+    ap.add_argument("--byzantine", default=None,
+                    help="comma-separated adversarial node indices "
+                         "(with --faults byzantine)")
+    ap.add_argument("--byzantine-mode", default="sign_flip",
+                    choices=("sign_flip", "scale"))
+    ap.add_argument("--robust", default=None,
+                    choices=registry.robust_rules.names(),
+                    help="Byzantine-robust consensus rule replacing the "
+                         "eq. 5 weighted mix (dense transport only)")
+    ap.add_argument("--trim", type=int, default=1,
+                    help="per-side trim count for --robust trimmed_mean")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny model + corpus for CI smoke runs")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
+
+    faults = None
+    if args.faults:
+        if args.driver != "scan":
+            ap.error("--faults needs --driver scan (fault schedules ride "
+                     "the multi-round scan)")
+        byz = (tuple(int(b) for b in args.byzantine.split(","))
+               if args.byzantine else
+               ((1,) if "byzantine" in args.faults else ()))
+        faults = FaultConfig(
+            kinds=tuple(k for k in args.faults.split(",") if k),
+            seed=args.fault_seed, drop_rate=args.drop_rate,
+            crash_rate=args.crash_rate, recover_rate=args.recover_rate,
+            corrupt_rate=args.corrupt_rate, corrupt_mode=args.corrupt_mode,
+            straggle_rate=args.straggle_rate, byzantine=byz,
+            byzantine_mode=args.byzantine_mode)
 
     mobility = None
     if args.mobility != "static":
@@ -112,6 +160,10 @@ def main() -> None:
             seed=args.mobility_seed, link_quality=args.link_quality)
 
     cfg = get_smoke_arch(args.arch)
+    n_seqs = 256
+    if args.quick:
+        n_seqs, args.batch = 64, min(args.batch, 4)
+        args.seq = min(args.seq, 32)
     import jax as _jax
     if (args.wire_dtype != "f32" and not args.simulate_wire
             and _jax.default_backend() == "cpu"):
@@ -125,14 +177,15 @@ def main() -> None:
         fed=FedConfig(num_nodes=args.nodes, local_steps=args.local_steps,
                       algorithm=args.algorithm, transport=args.transport,
                       wire_dtype=args.wire_dtype, staleness=args.staleness,
-                      simulate_wire=args.simulate_wire, mobility=mobility),
+                      simulate_wire=args.simulate_wire, mobility=mobility,
+                      faults=faults, robust=args.robust, trim=args.trim),
         train=TrainConfig(learning_rate=args.lr, batch_size=args.batch))
 
     # per-node synthetic corpora with injected duplicates (the paper's
     # redundant-data condition) — CND will see distinct ratios < 1
     nodes = [
         redundancy.inject_duplicates(
-            synthetic.token_lm(seed=i, n_seqs=256, seq_len=args.seq,
+            synthetic.token_lm(seed=i, n_seqs=n_seqs, seq_len=args.seq,
                                vocab=cfg.vocab_size),
             1.0 - args.redundancy, seed=i)
         for i in range(args.nodes)
@@ -155,7 +208,8 @@ def main() -> None:
           f"CND ratios={np.round(np.asarray(state.ratios), 3)}")
 
     if args.driver == "scan":
-        result = session.run(args.rounds, callbacks=[ChurnLogCallback()])
+        result = session.run(args.rounds, callbacks=[ChurnLogCallback(),
+                                                     HealthCallback()])
         losses = np.asarray(result.metrics["loss"])
         disagrees = np.asarray(result.metrics["disagreement"])
         per_round = result.wall_time_s / max(args.rounds, 1)
@@ -163,6 +217,23 @@ def main() -> None:
             _print_round(r, losses[r], float(disagrees[r]), per_round)
         print(f"total {result.wall_time_s:.1f}s "
               f"({per_round * 1e3:.1f} ms/round, single scan dispatch)")
+        if faults is not None and "health" in result.metrics:
+            # greppable CI smoke verdict: training made progress THROUGH
+            # the injected faults, and the schedule actually fired
+            crashed = int((1.0 - np.asarray(result.metrics["health"])).sum())
+            quarantined = int(np.asarray(result.metrics["quarantined"]).sum())
+            frozen = int(np.asarray(result.metrics["frozen"]).sum())
+            # byzantine/straggle/link_drop leave no health-telemetry
+            # trace (their effect is on the mix, not node health), so
+            # only demand a fired event for kinds that produce one
+            eventful = bool({"crash", "corrupt"} & set(faults.kinds))
+            ok = (np.isfinite(losses).all()
+                  and losses[-1].mean() < losses[0].mean()
+                  and (not eventful
+                       or crashed + quarantined + frozen >= 1))
+            print(f"FAULT_SMOKE {'ok' if ok else 'FAIL'} "
+                  f"crashed_node_rounds={crashed} "
+                  f"quarantined={quarantined}")
         state = result.state
     else:
         trainer = session.experiment.trainer(data)

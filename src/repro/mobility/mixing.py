@@ -44,6 +44,23 @@ def gamma_stack(etas: jax.Array, gamma_cap: float) -> jax.Array:
     return jax.vmap(lambda e: topology.stable_gamma(e, gamma_cap))(etas)
 
 
+def masked_eta_stack(etas: jax.Array, link_mask: jax.Array) -> jax.Array:
+    """Compose a fault-plan ``(R, K, K)`` link mask into an eta stack.
+
+    Each round's surviving entries are rescaled to the row's pre-mask
+    mass (``topology.renormalize_rows``) — for row-normalized policies
+    that is exactly recomputing the mixing weights on the masked
+    adjacency (the weights are multiplicative before the row normalize),
+    and for metropolis it preserves the sub-stochastic row mass. Rows
+    drained by a crash / total link loss come out all-zero: pure
+    self-update, the same partition convention mobility relies on."""
+    etas = jnp.asarray(etas, jnp.float32)
+    mask = jnp.asarray(link_mask, jnp.float32)
+    return jax.vmap(
+        lambda e, m: topology.renormalize_rows(e * m, e.sum(axis=1))
+    )(etas, mask)
+
+
 def constant_stacks(eta: jax.Array, gamma, rounds: int):
     """Broadcast one (K, K) eta / scalar gamma to (R, K, K) / (R,) —
     the static-topology degenerate case of the time-varying scan."""

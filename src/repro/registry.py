@@ -15,7 +15,11 @@ in a :class:`Registry` rather than a string branched on in some caller:
 * :data:`mobility_traces` — kinematic trace generators
   (``repro.mobility.traces``);
 * :data:`algorithms`      — trainer-level schemes
-  (:class:`AlgorithmSpec` entries registered by ``repro.core.baselines``).
+  (:class:`AlgorithmSpec` entries registered by ``repro.core.baselines``);
+* :data:`fault_models`    — fault injectors compiled into device-resident
+  per-round schedules (``repro.faults.models``);
+* :data:`robust_rules`    — Byzantine-robust aggregation rules replacing
+  the eq. 5 weighted mix (``repro.faults.robust``).
 
 Registering a plugin is one decorator at its definition site::
 
@@ -166,6 +170,8 @@ wire_codecs = Registry("wire codec")
 mixing_policies = Registry("mixing policy")
 mobility_traces = Registry("mobility trace")
 algorithms = Registry("algorithm")
+fault_models = Registry("fault model")
+robust_rules = Registry("robust aggregation rule")
 
 ALL_REGISTRIES = {
     "transports": transports,
@@ -173,6 +179,8 @@ ALL_REGISTRIES = {
     "mixing_policies": mixing_policies,
     "mobility_traces": mobility_traces,
     "algorithms": algorithms,
+    "fault_models": fault_models,
+    "robust_rules": robust_rules,
 }
 
 _PLUGINS_LOADED = False
@@ -196,6 +204,8 @@ def ensure_plugins() -> None:
         import repro.core.topology    # noqa: F401  (mixing policies)
         import repro.core.transport   # noqa: F401  (transports, codecs)
         import repro.mobility.traces  # noqa: F401  (mobility traces)
+        import repro.faults.models    # noqa: F401  (fault models)
+        import repro.faults.robust    # noqa: F401  (robust rules)
         import repro.core.baselines   # noqa: F401  (algorithms)
         _PLUGINS_LOADED = True
     finally:
@@ -213,6 +223,14 @@ def validate_fed_config(fed) -> None:
     wire_codecs.validate(fed.wire_dtype)
     mixing_policies.validate(fed.mixing)
     algorithms.validate(fed.algorithm)
+    if getattr(fed, "robust", None) is not None:
+        robust_rules.validate(fed.robust)
+
+
+def validate_fault_config(faults) -> None:
+    ensure_plugins()
+    for kind in faults.kinds:
+        fault_models.validate(kind)
 
 
 def validate_mobility_config(mob) -> None:

@@ -136,3 +136,54 @@ def test_checkpoint_roundtrips_flat_adam_moments_exactly(tmp_path):
     for a, b in zip(jax.tree.leaves(back.params),
                     jax.tree.leaves(state.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_save_is_atomic_no_temp_residue(tmp_path):
+    """save() lands every file via temp + os.replace (arrays first,
+    manifest last as the commit record): after a successful save no
+    .tmp residue remains, and overwriting an existing checkpoint never
+    leaves a torn state visible to a concurrent reader."""
+    path = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+    save(path, tree, step=1)
+    save(path, jax.tree.map(lambda a: a + 1, tree), step=2)
+    assert sorted(os.listdir(path)) == ["arrays.npz", "manifest.json"]
+    assert latest_step(path) == 2
+    out = restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(6.0).reshape(2, 3) + 1)
+
+
+def test_checkpoint_layout_mismatch_clear_error(tmp_path):
+    """Restoring into a structure with a different leaf count must name
+    the problem (config mismatch), not die in an opaque unpack."""
+    path = str(tmp_path / "ckpt")
+    save(path, {"w": jnp.ones((2, 3)), "b": jnp.ones((3,))}, step=0)
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore(path, {"w": jnp.ones((2, 3))})
+
+
+def test_session_resume_wraps_cryptic_failures(tmp_path):
+    """Session.resume turns low-level restore failures into a clear
+    'cannot resume' ValueError naming the checkpoint path."""
+    from repro.configs.base import FedConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.experiment import Experiment
+    from repro.models import simple
+
+    nodes = [synthetic.synthetic_mnist(seed=i, n=64) for i in range(4)]
+    items = jnp.asarray(pipeline.FederatedBatcher(nodes, 16, 1).node_items())
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    exp = Experiment.from_parts(
+        lambda p, b: loss(p, b), lambda r: simple.mlp_init(r, MLP_CONFIG),
+        fed=FedConfig(num_nodes=4, local_steps=1), train=TrainConfig())
+    session = exp.compile(data, items)
+    # a corrupt/wrong-layout checkpoint directory
+    bad = str(tmp_path / "bad")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="cannot resume"):
+        session.resume(bad)

@@ -1,0 +1,411 @@
+"""Fault injection, self-healing, and Byzantine-robust consensus.
+
+The fault subsystem mirrors the mobility design: host-compiled per-round
+schedules (``repro.faults.compile_plan``) ride the single round scan as
+device stacks, composed into the eta stacks via the ``(R, K, K)`` link
+mask. These tests pin down:
+
+* schedule compilation: determinism, resume slicing, crash row/col
+  zeroing, wire gating;
+* the paper-critical invariant that a fault-free run with the fault
+  subsystem ENABLED is bit-identical to one without it;
+* in-scan self-healing: corruption is quarantined, end states stay
+  finite, telemetry matches the compiled plan;
+* the robust aggregation rules (trimmed-mean / median) against a numpy
+  oracle, XLA vs Pallas-kernel parity, and the headline acceptance
+  criterion: 1 sign-flip Byzantine node of 8 under a platoon trace —
+  trimmed-mean C-DFL keeps training while eq. 5 mixing stalls.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FaultConfig, FedConfig, MobilityConfig,
+                                TrainConfig)
+from repro.configs.paper_models import MLP_CONFIG
+from repro.core import baselines
+from repro.core.cdfl import build_trainer
+from repro.data import pipeline, synthetic
+from repro.experiment import Experiment, HealthCallback
+from repro.faults import (compile_plan, config_active, corrupt_rows,
+                          robust_exchange, wire_guard, wire_kinds)
+from repro.faults.robust import sorted_weights
+from repro.kernels import ops
+from repro.kernels.robust_agg import robust_agg_xla
+from repro.models import simple
+
+COCKTAIL = FaultConfig(
+    kinds=("link_drop", "crash", "corrupt", "straggle", "byzantine"),
+    crash_rate=0.3, recover_rate=0.5, corrupt_rate=0.3,
+    straggle_rate=0.3, byzantine=(1,), seed=0)
+
+
+def _mlp_trainer(k=4, eval_fn=None, classes=None, **fed_kw):
+    nodes = [synthetic.synthetic_mnist(
+        seed=i, n=160,
+        classes=None if classes is None else classes(i)) for i in range(k)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 2)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    fed = FedConfig(num_nodes=k, local_steps=2, algorithm="cdfl", **fed_kw)
+    tr = baselines.ALGORITHMS["cdfl"](lambda p, b: loss(p, b), fed,
+                                      TrainConfig(learning_rate=1e-3),
+                                      eval_fn=eval_fn)
+    state = tr.init(jax.random.PRNGKey(0),
+                    lambda r: simple.mlp_init(r, MLP_CONFIG),
+                    jnp.asarray(batcher.node_items()))
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    return tr, state, data
+
+
+# --- schedule compilation ---------------------------------------------------
+
+def test_compile_plan_deterministic_and_slice_invariant():
+    """Resume invariance: compiling rounds [4, 10) directly equals the
+    [4:] slice of an unbroken [0, 10) compilation."""
+    pa = compile_plan(COCKTAIL, 10, 4)
+    pb = compile_plan(COCKTAIL, 6, 4, start=4)
+    pc = compile_plan(COCKTAIL, 10, 4)
+    for name in pa._fields:
+        np.testing.assert_array_equal(getattr(pa, name)[4:],
+                                      getattr(pb, name), err_msg=name)
+        np.testing.assert_array_equal(getattr(pa, name),
+                                      getattr(pc, name), err_msg=name)
+
+
+def test_crash_zeroes_link_row_and_column_and_gates_wire():
+    cfg = FaultConfig(kinds=("crash", "corrupt", "straggle", "byzantine"),
+                      crash_rate=0.5, recover_rate=0.2, corrupt_rate=1.0,
+                      straggle_rate=1.0, byzantine=(0, 1, 2, 3), seed=1)
+    p = compile_plan(cfg, 20, 4)
+    dead = p.health == 0
+    assert dead.any()                     # the schedule actually fired
+    r, k = np.nonzero(dead)
+    assert (p.link_mask[r, k, :] == 0).all()
+    assert (p.link_mask[r, :, k] == 0).all()
+    # a crashed node has no fresh payload: its wire behaviors are inert
+    assert (p.corrupt[r, k] == 0).all()
+    assert (p.byz[r, k] == 1.0).all()
+    assert (p.straggle[r, k] == 0).all()
+
+
+def test_zero_rate_config_is_statically_inactive():
+    quiet = FaultConfig(kinds=("crash", "corrupt", "byzantine"),
+                        crash_rate=0.0, corrupt_rate=0.0, byzantine=())
+    assert not config_active(quiet)
+    assert wire_kinds(quiet) == (False, False, False)
+    assert config_active(COCKTAIL)
+    assert wire_kinds(COCKTAIL) == (True, True, True)
+    assert compile_plan(quiet, 8, 4).is_noop
+
+
+# --- in-scan injection / self-healing helpers -------------------------------
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "bitflip"])
+def test_corrupt_rows_poisons_only_flagged(mode):
+    sent = jnp.ones((4, 8), jnp.float32) * 1.5
+    flags = jnp.asarray([0.0, 1.0, 0.0, 1.0])
+    out = np.asarray(corrupt_rows(sent, flags, mode))
+    np.testing.assert_array_equal(out[[0, 2]], 1.5)
+    bad = out[[1, 3]]
+    # 1.5 has the top exponent bit set: bitflip lands on a subnormal-ish
+    # small value; nan/inf are non-finite — all three are != the original
+    assert not np.any(bad == 1.5)
+    if mode in ("nan", "inf"):
+        assert not np.isfinite(bad).any()
+
+
+def test_corrupt_bitflip_small_weights_blow_up_finite():
+    """Exponent bit-flip on small weights yields huge-but-FINITE garbage
+    — exactly what the guard's magnitude threshold exists for."""
+    sent = jnp.full((2, 4), 1e-3, jnp.float32)
+    out = np.asarray(corrupt_rows(sent, jnp.asarray([1.0, 0.0]), "bitflip"))
+    assert np.isfinite(out[0]).all()
+    assert (np.abs(out[0]) > 1e12).all()
+    np.testing.assert_array_equal(out[1], np.float32(1e-3))
+
+
+def test_wire_guard_quarantines_and_preserves_row_mass():
+    k, p = 4, 8
+    rng = np.random.default_rng(0)
+    buf = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    sent = buf.at[2].set(jnp.nan)
+    eta = jnp.asarray(rng.random((k, k)), jnp.float32)
+    sent_clean, eta_used, bad = wire_guard(sent, buf, eta)
+    np.testing.assert_array_equal(np.asarray(bad), [0, 0, 1, 0])
+    # poisoned row scrubbed back to the sender's clean buffer
+    np.testing.assert_array_equal(np.asarray(sent_clean), np.asarray(buf))
+    e = np.asarray(eta_used)
+    assert (e[:, 2] == 0).all()           # sender's column dropped
+    # surviving entries renormalized to the ORIGINAL row mass
+    np.testing.assert_allclose(e.sum(axis=1),
+                               np.asarray(eta).sum(axis=1), rtol=1e-5)
+
+
+def test_wire_guard_clean_input_untouched_and_threshold():
+    buf = jnp.ones((3, 4), jnp.float32)
+    eta = jnp.full((3, 3), 0.3, jnp.float32)
+    sent_clean, eta_used, bad = wire_guard(buf, buf, eta)
+    assert not np.asarray(bad).any()
+    np.testing.assert_array_equal(np.asarray(eta_used), np.asarray(eta))
+    # finite but blown-up payloads trip the magnitude threshold
+    blown = buf.at[1].set(1e15)
+    _, _, bad = wire_guard(blown, buf, eta)
+    np.testing.assert_array_equal(np.asarray(bad), [0, 1, 0])
+    _, _, bad = wire_guard(blown, buf, eta, threshold=0.0)   # disabled
+    assert not np.asarray(bad).any()
+
+
+# --- fault-free bit-identity (the enable-without-firing invariant) ----------
+
+def test_zero_rate_faults_bit_identical_to_no_faults():
+    tr0, s0, d0 = _mlp_trainer()
+    f0, m0 = tr0.run_rounds(s0, d0, 5, rng=jax.random.PRNGKey(7))
+    quiet = FaultConfig(kinds=("crash",), crash_rate=0.0)
+    trz, sz, dz = _mlp_trainer(faults=quiet)
+    fz, mz = trz.run_rounds(sz, dz, 5, rng=jax.random.PRNGKey(7))
+    for a, b in zip(jax.tree.leaves(f0.params), jax.tree.leaves(fz.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m0["loss"]),
+                                  np.asarray(mz["loss"]))
+    assert "health" not in mz             # no telemetry on the quiet path
+
+
+# --- fault cocktail: survives, heals, reports -------------------------------
+
+@pytest.mark.parametrize("transport", ["dense", "ring", "gossip"])
+def test_fault_cocktail_stays_finite_with_telemetry(transport):
+    tr, state, data = _mlp_trainer(faults=COCKTAIL, transport=transport,
+                                   staleness=2 if transport == "gossip"
+                                   else 0)
+    final, m = tr.run_rounds(state, data, 6, rng=jax.random.PRNGKey(7))
+    for leaf in jax.tree.leaves(final.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    plan = compile_plan(COCKTAIL, 6, 4)
+    np.testing.assert_array_equal(np.asarray(m["health"]), plan.health)
+    q = np.asarray(m["quarantined"])
+    assert q.shape == (6, 4)
+    # NaN corruption fired (plan says so) => quarantine caught every one
+    np.testing.assert_array_equal(q, plan.corrupt)
+    assert np.asarray(m["frozen"]).shape == (6, 4)
+
+
+def test_crashed_node_params_freeze_and_recover():
+    cfg = FaultConfig(kinds=("crash",), crash_rate=0.4, recover_rate=0.3,
+                      seed=3)
+    plan = compile_plan(cfg, 6, 4)
+    assert (plan.health == 0).any()
+    tr, state, data = _mlp_trainer(faults=cfg)
+    final, m = tr.run_rounds(state, data, 6, rng=jax.random.PRNGKey(7))
+    health = np.asarray(m["health"])
+    np.testing.assert_array_equal(health, plan.health)
+    # "frozen" reports LIVE nodes rolled back after numeric divergence —
+    # none here; crash freezes are implied by health
+    np.testing.assert_array_equal(np.asarray(m["frozen"]), 0.0)
+    # crashed rounds really froze: the optimizer rolled back with the
+    # buffer, so each node stepped local_steps times per ALIVE round only
+    np.testing.assert_array_equal(np.asarray(final.opt.step),
+                                  (2 * health.sum(axis=0)).astype(np.int32))
+    # loss still computed for crashed nodes (they just don't move/talk)
+    assert np.isfinite(np.asarray(m["loss"])).all()
+
+
+def test_fault_checkpoint_resume_equals_straight_run(tmp_path):
+    """Segmentation invariance WITH faults: the straggler's replay
+    buffer (fstate) rides the checkpoint and the schedules are sliced at
+    the restored round."""
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+
+    def make():
+        nodes = [synthetic.synthetic_mnist(seed=i, n=160) for i in range(4)]
+        items = jnp.asarray(
+            pipeline.FederatedBatcher(nodes, 32, 2).node_items())
+        data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+                "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+        fed = FedConfig(num_nodes=4, local_steps=2, faults=COCKTAIL)
+        exp = Experiment.from_parts(
+            lambda p, b: loss(p, b),
+            lambda r: simple.mlp_init(r, MLP_CONFIG),
+            fed=fed, train=TrainConfig(learning_rate=1e-3))
+        return exp, data, items
+
+    exp, data, items = make()
+    straight = exp.compile(data, items).run(10)
+
+    exp2, data2, items2 = make()
+    first = exp2.compile(data2, items2)
+    first.run(5)
+    path = str(tmp_path / "ckpt")
+    first.save(path)
+    resumed = exp2.compile(data2, items2).resume(path)
+    result = resumed.run(5)
+
+    for a, b in zip(jax.tree.leaves(straight.final_params),
+                    jax.tree.leaves(result.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_health_callback_prints_summary(capsys):
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    nodes = [synthetic.synthetic_mnist(seed=i, n=160) for i in range(4)]
+    items = jnp.asarray(pipeline.FederatedBatcher(nodes, 32, 2).node_items())
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    exp = Experiment.from_parts(
+        lambda p, b: loss(p, b), lambda r: simple.mlp_init(r, MLP_CONFIG),
+        fed=FedConfig(num_nodes=4, local_steps=2, faults=COCKTAIL),
+        train=TrainConfig(learning_rate=1e-3))
+    exp.compile(data, items).run(4, callbacks=[HealthCallback()])
+    out = capsys.readouterr().out
+    assert "health: rounds=4 nodes=4" in out
+    assert "crashed_node_rounds=" in out
+
+
+# --- config / path validation -----------------------------------------------
+
+def test_trainer_round_rejects_faults():
+    tr, state, data = _mlp_trainer(faults=COCKTAIL)
+    batch = {"x": data["x"][:, :2], "y": data["y"][:, :2]}
+    with pytest.raises(ValueError, match="run_rounds"):
+        tr.round(state, batch)
+
+
+@pytest.mark.parametrize("alg", ["fedavg", "dpsgd", "cdfa_m"])
+def test_transportless_algorithms_reject_faults(alg):
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    with pytest.raises(ValueError):
+        build_trainer(lambda p, b: loss(p, b),
+                      FedConfig(algorithm=alg, faults=COCKTAIL),
+                      TrainConfig())
+
+
+def test_robust_requires_dense_transport():
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    with pytest.raises(ValueError, match="[Dd]ense"):
+        build_trainer(lambda p, b: loss(p, b),
+                      FedConfig(robust="trimmed_mean", transport="ring"),
+                      TrainConfig())
+
+
+def test_fault_config_validates():
+    with pytest.raises(ValueError, match="meteor_strike"):
+        FaultConfig(kinds=("meteor_strike",))
+    with pytest.raises(ValueError):
+        FaultConfig(kinds=("crash",), crash_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(kinds=("corrupt",), corrupt_mode="xor")
+    with pytest.raises(ValueError, match="krum"):
+        FedConfig(robust="krum")      # unregistered rule fails at config
+
+
+# --- robust aggregation: numpy oracle, XLA and kernel parity ---------------
+
+def _np_robust(mask, buf, sent, mode, trim):
+    m, b, s = (np.asarray(x) for x in (mask, buf, sent))
+    k, p = b.shape
+    out = np.zeros((k, p), np.float32)
+    for i in range(k):
+        cand = [b[i] if j == i else s[j] for j in range(k) if m[i, j]]
+        if not cand:
+            continue
+        c = np.sort(np.stack(cand), axis=0)
+        n = len(cand)
+        if mode == "median":
+            out[i] = (c[(n - 1) // 2] + c[n // 2]) / 2
+        else:
+            t = trim if n > 2 * trim else 0
+            out[i] = c[t:n - t].mean(axis=0)
+    return out
+
+
+@pytest.mark.parametrize("mode,trim", [("median", 0), ("trimmed_mean", 1),
+                                       ("trimmed_mean", 2)])
+@pytest.mark.parametrize("k", [3, 8])
+def test_robust_agg_matches_numpy_oracle(mode, trim, k):
+    rng = np.random.default_rng(trim * 10 + k)
+    buf = jnp.asarray(rng.normal(size=(k, 256)), jnp.float32)
+    sent = jnp.asarray(rng.normal(size=(k, 256)), jnp.float32)
+    mask = jnp.asarray(rng.random((k, k)) < 0.6) | jnp.eye(k, dtype=bool)
+    mask = mask.at[k // 2].set(jnp.zeros(k, dtype=bool))   # drained row
+    w = sorted_weights(mask, mode, trim)
+    want = _np_robust(mask, buf, sent, mode, trim)
+    np.testing.assert_allclose(np.asarray(robust_agg_xla(w, mask, buf, sent)),
+                               want, atol=1e-5)
+    # Pallas kernel (interpret-mode on CPU) agrees bitwise-close
+    got = ops.robust_agg(w, mask, buf, sent, force_kernel=True)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_robust_exchange_gamma_blend_and_isolated_rows():
+    """robust_exchange moves each row toward its robust aggregate by
+    gamma, and leaves neighbor-less rows exactly in place."""
+    rng = np.random.default_rng(5)
+    k = 4
+    buf = jnp.asarray(rng.normal(size=(k, 128)), jnp.float32)
+    sent = jnp.asarray(rng.normal(size=(k, 128)), jnp.float32)
+    eta = jnp.asarray(rng.random((k, k)), jnp.float32)
+    eta = eta.at[1].set(0.0)              # node 1 heard nobody
+    out = np.asarray(robust_exchange(buf, sent, eta, 0.4, mode="median"))
+    np.testing.assert_array_equal(out[1], np.asarray(buf)[1])
+    mask = np.asarray((eta > 0) | jnp.eye(k, dtype=bool))
+    agg = _np_robust(mask, buf, sent, "median", 0)
+    want = np.asarray(buf) + 0.4 * (agg - np.asarray(buf))
+    np.testing.assert_allclose(out[[0, 2, 3]], want[[0, 2, 3]], atol=1e-5)
+
+
+def test_sign_flip_neighbor_rejected_by_trimmed_mean():
+    """One sign-flipped sender among 5: the trimmed mean of each
+    coordinate must fall inside the honest value range."""
+    k = 5
+    rng = np.random.default_rng(9)
+    buf = jnp.asarray(rng.normal(size=(k, 64)), jnp.float32)
+    sent = buf.at[2].multiply(-25.0)
+    eta = jnp.asarray(np.ones((k, k)) - np.eye(k), jnp.float32)
+    out = np.asarray(robust_exchange(buf, sent, eta, 1.0,
+                                     mode="trimmed_mean", trim=1))
+    lo = np.minimum(np.asarray(buf).min(axis=0), 0)
+    hi = np.maximum(np.asarray(buf).max(axis=0), 0)
+    assert (out >= lo[None, :] - 1e-5).all()
+    assert (out <= hi[None, :] + 1e-5).all()
+
+
+# --- the headline acceptance: Byzantine platoon -----------------------------
+
+def test_byzantine_platoon_trimmed_mean_trains_while_eq5_stalls():
+    """1 sign-flip Byzantine vehicle of 8 under the platoon trace, with
+    non-IID class skew (each node holds 3 of 10 classes, so unseen
+    classes are learnable ONLY through consensus): trimmed-mean C-DFL
+    reaches >=80% honest eval accuracy while the eq. 5 weighted mix
+    demonstrably stalls below it."""
+    k = 8
+    platoon = MobilityConfig(kind="platoon", speed=20.0, speed_jitter=0.3,
+                             radio_range=250.0, dt=2.0, seed=0)
+    test_set = synthetic.synthetic_mnist(seed=99, n=400)
+
+    def eval_fn(p):
+        return simple.accuracy(
+            simple.mlp_forward(p, jnp.asarray(test_set.x)),
+            jnp.asarray(test_set.y))
+
+    def run(robust):
+        tr, state, data = _mlp_trainer(
+            k=k, eval_fn=eval_fn,
+            classes=lambda i: [(3 * i) % 10, (3 * i + 1) % 10,
+                               (3 * i + 2) % 10],
+            gamma=0.8, mobility=platoon,
+            faults=FaultConfig(kinds=("byzantine",), byzantine=(3,),
+                               byzantine_mode="sign_flip"),
+            robust=robust)
+        _, m = tr.run_rounds(state, data, 20, rng=jax.random.PRNGKey(7))
+        honest = np.ones(k, dtype=bool)
+        honest[3] = False
+        return np.asarray(m["eval"])[:, honest]
+
+    acc_eq5 = run(None)
+    acc_robust = run("trimmed_mean")
+    tail_eq5 = acc_eq5[-5:].mean()
+    tail_robust = acc_robust[-5:].mean()
+    assert tail_robust >= 0.85, tail_robust          # ISSUE floor is 0.80
+    assert tail_eq5 < 0.80, tail_eq5                 # eq. 5 stalls
+    assert tail_robust - tail_eq5 > 0.10

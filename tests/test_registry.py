@@ -69,6 +69,9 @@ def test_builtin_plugins_registered():
         "manhattan", "platoon", "waypoint")
     assert set(registry.algorithms.names()) == {
         "cdfl", "cfa", "cdfa_m", "dpsgd", "fedavg", "metropolis"}
+    assert registry.fault_models.names() == (
+        "byzantine", "corrupt", "crash", "link_drop", "straggle")
+    assert registry.robust_rules.names() == ("median", "trimmed_mean")
 
 
 def test_algorithm_specs_carry_mixing_and_transport_flags():

@@ -61,3 +61,94 @@ def test_metropolis_symmetric():
     adj = jnp.asarray(topology.adjacency("chain", 5))
     w = topology.metropolis_mixing(adj)
     np.testing.assert_allclose(np.asarray(w), np.asarray(w).T, rtol=1e-6)
+
+
+# --- property fuzz: EVERY registered mixing policy on arbitrary masks -------
+#
+# Fault quarantine and mobility both hand the policies arbitrary (K, K)
+# masks — including all-zero rows (drained neighborhoods) and all-zero
+# columns (quarantined senders). The contract: weights stay finite and
+# non-negative, stay zero off-mask, rows are (sub-)stochastic (sum <= 1,
+# metropolis keeps its self weight implicit), and zero-degree rows come
+# out ALL-zero (pure self-update, never NaN). Runs under hypothesis when
+# installed (CI); falls back to a seeded numpy fuzz sweep locally.
+
+from repro import registry as _registry
+from repro.core.topology import renormalize_rows as _renorm
+
+_registry.ensure_plugins()
+_POLICIES = sorted(_registry.mixing_policies.names())
+
+
+def _check_mixing_properties(adj):
+    k = adj.shape[0]
+    adj_j = jnp.asarray(adj, jnp.float32)
+    ratios = jnp.linspace(0.1, 1.0, k)
+    sizes = jnp.linspace(50.0, 400.0, k)
+    degree = np.asarray(adj).sum(axis=1)
+    for name in _POLICIES:
+        eta = np.asarray(topology.mixing_weights(adj_j, name,
+                                                 ratios=ratios, sizes=sizes))
+        assert np.isfinite(eta).all(), (name, adj)
+        assert (eta >= 0).all(), (name, adj)
+        assert (eta[np.asarray(adj) == 0] == 0).all(), (name, adj)
+        assert (eta.sum(axis=1) <= 1.0 + 1e-5).all(), (name, adj)
+        assert (eta[degree == 0] == 0).all(), (name, adj)
+    # renormalize_rows (the fault-mask composition primitive): preserves
+    # the requested row mass over survivors, zeros drained rows
+    mask = (np.asarray(adj) > 0).astype(np.float32)
+    eta = np.asarray(topology.mixing_weights(adj_j, "uniform"))
+    target = eta.sum(axis=1)
+    ren = np.asarray(_renorm(jnp.asarray(eta * mask),
+                             jnp.asarray(target, jnp.float32)))
+    assert np.isfinite(ren).all()
+    survived = (eta * mask).sum(axis=1) > 0
+    np.testing.assert_allclose(ren.sum(axis=1)[survived], target[survived],
+                               rtol=1e-4)
+    assert (ren[~survived] == 0).all()
+
+
+def _random_mask(rng, k):
+    kind = rng.integers(0, 4)
+    if kind == 0:
+        adj = (rng.random((k, k)) < rng.uniform(0.1, 0.9)).astype(np.float32)
+    elif kind == 1:                         # weighted links (mobility fading)
+        adj = rng.random((k, k)).astype(np.float32) * \
+            (rng.random((k, k)) < 0.5)
+    elif kind == 2:                         # near-empty
+        adj = (rng.random((k, k)) < 0.05).astype(np.float32)
+    else:                                   # dense minus a dead node
+        adj = np.ones((k, k), np.float32)
+        dead = rng.integers(0, k)
+        adj[dead, :] = 0.0
+        adj[:, dead] = 0.0
+    np.fill_diagonal(adj, 0.0)
+    if rng.random() < 0.3:                  # quarantined sender column
+        adj[:, rng.integers(0, k)] = 0.0
+    if rng.random() < 0.3:                  # drained receiver row
+        adj[rng.integers(0, k), :] = 0.0
+    return adj
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(2, 8).flatmap(
+        lambda k: hnp.arrays(np.float32, (k, k),
+                             elements=st.floats(0.0, 1.0, width=32))))
+    def test_mixing_policies_row_stochastic_any_mask(adj):
+        np.fill_diagonal(adj, 0.0)          # convention: no self loops
+        _check_mixing_properties(adj)
+
+except ImportError:                          # hypothesis not installed
+    def test_mixing_policies_row_stochastic_any_mask():
+        rng = np.random.default_rng(0)
+        _check_mixing_properties(np.zeros((3, 3), np.float32))  # all-zero
+        _check_mixing_properties(np.ones((4, 4), np.float32)
+                                 - np.eye(4, dtype=np.float32))
+        for _ in range(50):
+            _check_mixing_properties(
+                _random_mask(rng, int(rng.integers(2, 9))))

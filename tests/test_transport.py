@@ -102,6 +102,29 @@ def test_gossip_reads_snapshot_exactly_s_rounds_old():
         buf = out + 0.01                         # perturb so rounds differ
 
 
+def test_gossip_staleness_exceeding_rounds_reads_initial_buffer():
+    """Edge case: staleness >= rounds run. Every slot of the snapshot
+    ring still holds the INITIAL buffer (init_state broadcasts it), so
+    every exchange must mix against buf0 — numpy oracle per round."""
+    s = 8
+    buf0, _ = flatten.flatten(_mlp_like(seed=5))
+    eta = _ring_eta()
+    t = transport.GossipTransport(staleness=s)
+    state = t.init_state(buf0)
+    g = 0.3
+    eta32 = np.asarray(eta, np.float32)
+    row = eta32.sum(axis=1)
+    b0 = np.asarray(buf0)
+    buf = buf0
+    for rnd in range(5):                  # 5 rounds < staleness=8
+        out, state = t.exchange(buf, eta, g, state, jnp.int32(rnd))
+        b = np.asarray(buf)
+        expect = b + g * (eta32 @ b0 - row[:, None] * b)
+        np.testing.assert_allclose(np.asarray(out), expect,
+                                   rtol=1e-6, atol=1e-6)
+        buf = out + 0.01                  # perturb so rounds differ
+
+
 def test_bf16_wire_halves_bytes_and_bounds_drift_over_20_rounds():
     params = _mlp_like(seed=5)
     buf, layout = flatten.flatten(params)
