@@ -26,6 +26,8 @@ REQUIRED_FAMILIES = (
     "consensus_step_",
     "transport_",
     "consensus_",           # scanned consensus rounds
+    "sparse_mix_",          # top-D gather-mix rows (city-scale path)
+    "sparse_eta_stack_",    # sparse stack build-cost/memory row
     "cdfl_",                # end-to-end round + scan rows
     "mobility_",            # eta-resample + churned-scan rows
     "rwkv6_",
@@ -70,7 +72,31 @@ def check(path: str) -> list[str]:
     for fam in REQUIRED_FAMILIES:
         if not any(n.startswith(fam) for n in names):
             errors.append(f"no row in family {fam!r}*")
+    errors += _check_sparse_beats_dense(rows)
     return errors
+
+
+def _check_sparse_beats_dense(rows) -> list[str]:
+    """The point of the sparse representation is asymptotics: at equal
+    fleet size the top-D gather-mix must beat the dense (K,K)@(K,P)
+    matmul. Guarded at K=1024 (the smallest city-scale row) whenever
+    both rows are present — a 'sparse' path that quietly densifies
+    would pass every numerics test and fail only here."""
+    by_name = {r.get("name"): r for r in rows if isinstance(r, dict)}
+    sparse = by_name.get("sparse_mix_k1024")
+    dense = by_name.get("consensus_mix_xla_k1024")
+    if not sparse or not dense:
+        return []
+    us_s = sparse.get("us_per_call")
+    us_d = dense.get("us_per_call")
+    if not isinstance(us_s, (int, float)) or \
+            not isinstance(us_d, (int, float)):
+        return []                             # typed errors reported above
+    if us_s >= us_d:
+        return [f"sparse_mix_k1024 ({us_s:.0f} us) not faster than "
+                f"consensus_mix_xla_k1024 ({us_d:.0f} us) — the top-D "
+                f"gather path lost its asymptotic advantage"]
+    return []
 
 
 def _scan_flat_us_per_round(path: str) -> float | None:

@@ -74,6 +74,75 @@ def bench_consensus_mix():
     return rows
 
 
+def bench_sparse_mix(quick: bool = False):
+    """City-scale consensus: the sparse top-D gather-mix (O(K·D·P)
+    take+einsum — the path auto-selected off-TPU) vs the dense
+    (K,K)@(K,P) consensus matmul at growing fleet sizes, plus the
+    host-side cost and memory of building a sparse eta stack straight
+    from a kinematic trace (no (R, K, K) intermediate)."""
+    from repro import mobility
+    from repro.configs.base import MobilityConfig
+    from repro.core import flatten, topology
+
+    rows = []
+    d, p = 8, 1280
+    fleet = (256, 1024) if quick else (256, 1024, 4096)
+    reps = 3 if quick else 7
+    rng = np.random.default_rng(0)
+    gamma = jnp.float32(0.4)
+    sparse_fn = jax.jit(lambda b, i, v: flatten.sparse_mix_flat(
+        b, i, v, gamma, use_kernel=False))
+    dense_fn = jax.jit(lambda b, e: flatten.mix_flat(
+        b, e, gamma, use_kernel=False))
+    for k in fleet:
+        # random bounded-degree weights: d neighbors per node, row mass
+        # ~1 (what a radio-range graph sparsifies to)
+        eta = np.zeros((k, k), np.float32)
+        for i in range(k):
+            nbrs = rng.choice(k - 1, size=d, replace=False)
+            nbrs = nbrs + (nbrs >= i)            # skip the diagonal
+            w = rng.random(d).astype(np.float32) + 0.1
+            eta[i, nbrs] = w / w.sum()
+        sp = topology.sparsify_eta(jnp.asarray(eta), d)
+        buf = jnp.asarray(rng.standard_normal((k, p)), jnp.float32)
+        us_s = _median_time(sparse_fn, buf, sp.idx, sp.val, reps=reps)
+        mb = k * (d + 2) * p * 4 / 1e6           # gather + read + write
+        rows.append({"name": f"sparse_mix_k{k}", "us_per_call": us_s,
+                     "derived": f"{mb / us_s * 1e3:.1f} MB/ms "
+                                f"(K={k}, D={d}, P={p})"})
+        if k <= 1024:
+            # the dense matmul is the comparison point; at K=4096 on
+            # CPU it is minutes-scale, so only the sparse row is emitted
+            us_d = _median_time(dense_fn, buf, jnp.asarray(eta),
+                                reps=reps)
+            rows.append({"name": f"consensus_mix_xla_k{k}",
+                         "us_per_call": us_d,
+                         "derived": f"dense (K,K)@(K,P); sparse is "
+                                    f"{us_d / us_s:.1f}x faster"})
+
+    # eta-stack residency: building (R, K, D) idx/val straight from the
+    # trace vs what the dense (R, K, K) stack would occupy
+    r_stack, k_stack = (6, 256) if quick else (60, 1024)
+    mob = MobilityConfig(kind="platoon", speed=20.0, radio_range=250.0,
+                         seed=0)
+
+    def build_stack():
+        sp_, _ = mobility.sparse_scenario_stacks(
+            mob, r_stack, k_stack, rule="uniform", gamma_cap=0.5,
+            degree=d)
+        return jax.block_until_ready(sp_.val)
+
+    us_b = _median_time(build_stack, reps=2 if quick else 3, warmup=1)
+    dense_mb = r_stack * k_stack * k_stack * 4 / 1e6
+    sparse_mb = r_stack * k_stack * d * 8 / 1e6  # int32 idx + f32 val
+    rows.append({"name": f"sparse_eta_stack_k{k_stack}_r{r_stack}",
+                 "us_per_call": us_b,
+                 "derived": f"{sparse_mb:.1f} MB (R,K,D) sparse vs "
+                            f"{dense_mb:.0f} MB dense (R,K,K): "
+                            f"{dense_mb / sparse_mb:.0f}x smaller"})
+    return rows
+
+
 def bench_rwkv_formulations():
     """scan vs chunked (the §Perf SSM story, measured on CPU XLA)."""
     from repro.models import rwkv

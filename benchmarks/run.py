@@ -37,6 +37,7 @@ def main() -> None:
                    (micro.bench_flat_consensus, quick_kw),
                    (micro.bench_transports, quick_kw),
                    (micro.bench_scan_consensus_rounds, quick_kw),
+                   (micro.bench_sparse_mix, quick_kw),
                    (micro.bench_rwkv_formulations, {}),
                    (micro.bench_consensus_round, {}),
                    (micro.bench_scan_rounds, quick_kw),

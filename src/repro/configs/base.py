@@ -226,6 +226,13 @@ class FedConfig:
     # (cdfl | cfa | cdfa_m | dpsgd | fedavg | metropolis | plugins)
     algorithm: str = "cdfl"
     cdfa_fraction: float = 1.0       # C-DFA(M): fraction of layers mixed
+    # --- mixing-weight storage format ----------------------------------------
+    # "dense": (K, K) eta matrices everywhere (bit-identical to previous
+    # builds, the default). "sparse": per-node top-``degree`` neighbor
+    # idx/val pairs — (K, D) instead of (K, K), O(K·D·P) mix instead of
+    # O(K²P) — the city-scale format (dense/gossip transports only).
+    mixing_format: str = "dense"     # dense | sparse
+    degree: int = 8                  # sparse top-D neighbor cap
     # --- consensus transport (repro.core.transport) --------------------------
     transport: str = "dense"         # registered transport plugin name
     wire_dtype: str = "f32"          # registered wire codec plugin name

@@ -20,18 +20,29 @@ Two drivers:
     ``jax.lax.scan`` with donated state buffers — no per-round jit
     dispatch and no host-numpy batch transfer.
 
-The round pipeline is FLAT-RESIDENT (except dpsgd): params and Adam
-moments live in lane-padded ``(K, P)`` buffers (``FedState.opt`` is a
-:class:`repro.optim.FlatAdamState`), the consensus exchange and the
-scan carry operate on the buffers directly, and params are packed once
-per run — not once per round. Whether the LOCAL STEPS also run in flat
-space follows the backend (``build_trainer(flat_local=...)``): on
-accelerators the fused flat Adam replaces 3 x n_leaves small ops per
-step and only the forward/backward reads pytree slice views; on CPU
-the step loop runs in leaf space (XLA:CPU's slice/pack lowering makes
-per-step buffer views a measured pessimization) with a one-time
-conversion at the scan boundary. Both lowerings are elementwise the
-same arithmetic.
+The round pipeline is FLAT-RESIDENT for every algorithm (dpsgd
+included): params and Adam moments live in lane-padded ``(K, P)``
+buffers (``FedState.opt`` is a :class:`repro.optim.FlatAdamState`), the
+consensus exchange and the scan carry operate on the buffers directly,
+and params are packed once per run — not once per round. Whether the
+LOCAL STEPS also run in flat space follows the backend
+(``build_trainer(flat_local=...)``): on accelerators the fused flat
+Adam replaces 3 x n_leaves small ops per step and only the
+forward/backward reads pytree slice views; on CPU the step loop runs
+in leaf space (XLA:CPU's slice/pack lowering makes per-step buffer
+views a measured pessimization) with a one-time conversion at the scan
+boundary. Both lowerings are elementwise the same arithmetic. dpsgd —
+which gossips every SGD step, not once per round — follows the same
+split: its flat lowering mixes the resident buffer between flat Adam
+steps, its CPU lowering keeps the leaf-wise per-step mix.
+
+Mixing weights come in two FORMATS (``FedConfig.mixing_format``):
+dense ``(K, K)`` eta matrices (default, bit-identical to previous
+builds) or sparse top-D ``topology.SparseEta`` idx/val pairs
+(``(K, D)`` per round) — the city-scale representation. The sparse
+stacks ride the same scan as per-round xs (SparseEta is a pytree), the
+dense/gossip transports gather D neighbor rows instead of running the
+(K,K)@(K,P) matmul, and fault link masks compile to sparse row edits.
 
 How the exchange moves between nodes is pluggable: both drivers route
 the flat-buffer mix through a ``repro.core.transport`` Transport (dense
@@ -66,7 +77,7 @@ import jax.numpy as jnp
 
 from repro import registry
 from repro.configs.base import FedConfig, TrainConfig
-from repro.core import consensus, flatten, sketch, topology
+from repro.core import flatten, sketch, topology
 from repro.core import transport as transport_lib
 from repro.faults import models as faults_lib
 from repro.faults import robust as robust_lib
@@ -76,7 +87,6 @@ from repro.optim import FlatAdamState, adam, flat_adam
 class FedState(NamedTuple):
     params: object            # pytree, leaves (K, ...)
     opt: object               # FlatAdamState with (K, P) moment buffers
-                              # (dpsgd: pytree AdamState, leaves (K, ...))
     ratios: jax.Array         # (K,) CND distinct ratios Ë_k
     sizes: jax.Array          # (K,) raw dataset sizes E_k
     round: jax.Array          # int32
@@ -93,9 +103,10 @@ class Trainer(NamedTuple):
     round: Callable           # (state, batches) -> (state, metrics)
     eta_fn: Callable          # state -> (K, K) mixing weights
     run_rounds: Callable      # (state, data, num_rounds[, rng]) -> (state, metrics)
-    # (state, num_rounds) -> ((R, K, K) eta, (R,) gamma): the per-round
-    # mixing stacks the scan driver consumes (mobility-derived when
-    # FedConfig.mobility is set, broadcast static weights otherwise)
+    # (state, num_rounds) -> ((R, K, K) eta | SparseEta (R, K, D),
+    # (R,) gamma): the per-round mixing stacks the scan driver consumes
+    # (mobility-derived when FedConfig.mobility is set, broadcast
+    # static weights otherwise; sparse under mixing_format='sparse')
     mixing_stack: Callable = None
 
 
@@ -209,16 +220,17 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 "robust aggregation needs every neighbor row "
                 "materialized: use the dense transport "
                 f"(got {type(transport).__name__})")
-    # dpsgd mixes leaf-wise every SGD step, so it keeps the pytree Adam;
-    # every other algorithm runs the flat-resident pipeline: params AND
-    # Adam moments live in (K, P) FedState buffers, the consensus
-    # exchange and the scan carry are flat, and the local-step loop
-    # representation follows ``flat_local`` (see docstring).
+    # Every algorithm runs the flat-resident pipeline: params AND Adam
+    # moments live in (K, P) FedState buffers, the consensus exchange
+    # and the scan carry are flat, and the local-step loop
+    # representation follows ``flat_local`` (see docstring). dpsgd's
+    # per-step gossip rides the same buffers in its flat lowering and
+    # stays leaf-wise in its CPU lowering.
     opt = adam(train.learning_rate, train.beta1, train.beta2, train.eps,
                train.weight_decay, train.grad_clip)
     fopt = flat_adam(train.learning_rate, train.beta1, train.beta2,
                      train.eps, train.weight_decay, train.grad_clip)
-    flat_resident = fed.algorithm != "dpsgd"
+    sparse_fmt = getattr(fed, "mixing_format", "dense") == "sparse"
     if flat_local is None:
         flat_local = jax.default_backend() != "cpu"
     # Partially unrolling the local-step scan lets XLA build larger fusion
@@ -244,25 +256,22 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         ratios, sizes = _node_sketches(node_items, fed)
         tstate = ()
         fstate = ()
-        if flat_resident:
-            # ONE pack serves both the flat Adam moments and (when the
-            # transport keeps state, e.g. gossip snapshots) init_state
-            buf, layout = flatten.flatten(params)
-            opt_state = fopt.init(buf)
-            if uses_transport and getattr(transport, "stateful", True):
-                wire = buf
-                if fed.algorithm == "cdfa_m":
-                    prefix = flatten.prefix_length(layout,
-                                                   fed.cdfa_fraction)
-                    wire = buf[:, :prefix]
-                tstate = transport.init_state(wire)
-            if has_straggle:
-                # a round-0 straggler replays the init broadcast; rides
-                # the FedState so checkpoint/resume replays the same
-                # stale payloads as an unbroken run
-                fstate = buf
-        else:
-            opt_state = jax.vmap(opt.init)(params)
+        # ONE pack serves both the flat Adam moments and (when the
+        # transport keeps state, e.g. gossip snapshots) init_state
+        buf, layout = flatten.flatten(params)
+        opt_state = fopt.init(buf)
+        if uses_transport and getattr(transport, "stateful", True):
+            wire = buf
+            if fed.algorithm == "cdfa_m":
+                prefix = flatten.prefix_length(layout,
+                                               fed.cdfa_fraction)
+                wire = buf[:, :prefix]
+            tstate = transport.init_state(wire)
+        if has_straggle:
+            # a round-0 straggler replays the init broadcast; rides
+            # the FedState so checkpoint/resume replays the same
+            # stale payloads as an unbroken run
+            fstate = buf
         return FedState(params, opt_state, ratios, sizes,
                         jnp.zeros((), jnp.int32), tstate, fstate)
 
@@ -349,6 +358,83 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return _run_local_steps_from_idx(_leaf_local_step, params,
                                          opt_state, data, idx)
 
+    # -- dpsgd (Lian et al. 17): gossip-average every SGD step ---------------
+    # The per-step mix couples the nodes, so dpsgd cannot vmap a
+    # per-node scan like the scaffolds above: it scans over STEPS with
+    # the node axis inside (mix across nodes, then one vmapped Adam
+    # step). Same flat/leaf split as the round algorithms: the flat
+    # lowering mixes the resident (K, P) buffer between fused flat-Adam
+    # steps; the CPU lowering mixes leaf-wise (reshaped (K, -1) views)
+    # with pytree moments, converted at the loop boundary.
+
+    def _dpsgd_mix(buf2d, eta, gamma):
+        """Per-step gossip on any (K, M) 2-D view — dense delta-form
+        mix or the sparse top-D gather, matching the wire format."""
+        if isinstance(eta, topology.SparseEta):
+            return flatten.sparse_mix_flat(buf2d, eta.idx, eta.val, gamma)
+        return flatten.mix_flat(buf2d, eta, gamma)
+
+    def _dpsgd_steps(step_all, p0, o0, xs):
+        def step(carry, x):
+            p, o, loss = step_all(*carry, x)
+            return (p, o), loss
+        (p, o), losses = jax.lax.scan(step, (p0, o0), xs,
+                                      unroll=local_unroll)
+        return p, o, losses.mean() * jnp.ones((fed.num_nodes,))
+
+    def _dpsgd_flat_step(buf, ost, batch, eta, gamma, layout):
+        buf = _dpsgd_mix(buf, eta, gamma)
+        buf, ost, losses = jax.vmap(
+            lambda v, o, b: _flat_local_step(v, o, b, layout)
+        )(buf, ost, batch)
+        return buf, ost, losses.mean()
+
+    def _dpsgd_leaf_step(p, o, batch, eta, gamma):
+        def mix_leaf(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1)
+            return _dpsgd_mix(flat, eta, gamma).reshape(leaf.shape)
+        p = jax.tree.map(mix_leaf, p)
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(p, batch)
+        p, o = jax.vmap(opt.update)(grads, o, p)
+        return p, o, losses.mean()
+
+    # Both drivers below take and return ``opt_state`` in the ambient
+    # step-loop representation — FlatAdamState when ``flat_local``,
+    # leaf AdamState otherwise — matching the main-branch convention so
+    # the scan boundary converts once, never per round.
+
+    def dpsgd_updates(buf, opt_state, layout, eta, gamma, batches):
+        """One dpsgd round on host-fed batches (leaves (K, S, B, ...))."""
+        bt = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), batches)
+        if flat_local:
+            return _dpsgd_steps(
+                lambda v, o, b: _dpsgd_flat_step(v, o, b, eta, gamma,
+                                                 layout),
+                buf, opt_state, bt)
+        p, o, loss = _dpsgd_steps(
+            lambda p, o, b: _dpsgd_leaf_step(p, o, b, eta, gamma),
+            flatten.unflatten(buf, layout), opt_state, bt)
+        return flatten.flatten(p, layout)[0], o, loss
+
+    def dpsgd_updates_from_idx(buf, opt_state, layout, eta, gamma,
+                               data, idx):
+        """Scan-driver dpsgd round: each step gathers its minibatches
+        on device from the resident datasets (idx: (K, S, B))."""
+        def batch_of(i):  # i: (K, B) this step's per-node indices
+            return jax.tree.map(
+                lambda a: jax.vmap(lambda ad, j: ad[j])(a, i), data)
+        steps_idx = jnp.swapaxes(idx, 0, 1)
+        if flat_local:
+            return _dpsgd_steps(
+                lambda v, o, i: _dpsgd_flat_step(v, o, batch_of(i), eta,
+                                                 gamma, layout),
+                buf, opt_state, steps_idx)
+        p, o, loss = _dpsgd_steps(
+            lambda p, o, i: _dpsgd_leaf_step(p, o, batch_of(i), eta,
+                                             gamma),
+            flatten.unflatten(buf, layout), opt_state, steps_idx)
+        return flatten.flatten(p, layout)[0], o, loss
+
     def mix_buf(buf, sizes, eta, gamma, layout, tstate, rnd, sent=None):
         """The round's consensus exchange on the flat (K, P) buffer,
         routed through the selected transport. ``sent`` (fault
@@ -380,16 +466,6 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         # cdfl, cfa, metropolis — eq. (5)
         return transport.exchange(buf, eta, gamma, tstate, rnd, sent=sent)
 
-    def _metrics(params, loss, gamma):
-        metrics = {
-            "loss": loss,                                   # (K,)
-            "disagreement": consensus.disagreement(params),
-            "gamma": gamma,
-        }
-        if eval_fn is not None:
-            metrics["eval"] = jax.vmap(eval_fn)(params)
-        return metrics
-
     def _flat_metrics(buf, layout, loss, gamma):
         """Round metrics straight off the resident buffer — the
         disagreement is one pass over (K, P), and eval reads the params
@@ -413,50 +489,30 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         flat moments to leaf space and back each round — unavoidable
         per-call overhead that ``run_rounds`` hoists to the scan
         boundary; multi-round work belongs on the scan driver."""
-        if fed.algorithm == "dpsgd":
-            # D-PSGD (Lian et al. 17): gossip-average every SGD step.
-            # The per-step gossip mixes LEAF-WISE: packing the pytree
-            # into the flat buffer every SGD step would triple the
-            # memory traffic of this hot loop (see the flat-vs-perleaf
-            # rows in BENCH_consensus.json); the flat engine is for the
-            # once-per-round exchange.
-            a = topology.consensus_matrix(eta, gamma)
-
-            def mix_leaf(leaf):
-                flat = leaf.reshape(leaf.shape[0], -1)
-                return flatten.matmul_nodes(a, flat).reshape(leaf.shape)
-
-            def step(carry, batch):
-                p, o = carry
-                p = jax.tree.map(mix_leaf, p)
-                losses, grads = jax.vmap(
-                    jax.value_and_grad(loss_fn))(p, batch)
-                p, o = jax.vmap(opt.update)(grads, o, p)
-                return (p, o), losses.mean()
-            bt = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), batches)
-            (params, opt_state), losses = jax.lax.scan(
-                step, (state.params, state.opt), bt)
-            loss = losses.mean() * jnp.ones((fed.num_nodes,))
-            new_state = FedState(params, opt_state, state.ratios,
-                                 state.sizes, state.round + 1, state.tstate)
-            return new_state, _metrics(params, loss, gamma)
-
         # flat-resident round: ONE pack at entry, the mix and (with
         # flat_local) the local Adam steps on the (K, P) buffer, ONE
         # unpack into the returned FedState
         layout = flatten.make_layout(state.params)
         buf, _ = flatten.flatten(state.params, layout)
-        mixed, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
-                                state.tstate, state.round)
-        if flat_local:
-            buf, opt_state, loss = flat_local_updates(mixed, state.opt,
-                                                      layout, batches)
+        if fed.algorithm == "dpsgd":
+            tstate = state.tstate
+            o0 = (state.opt if flat_local
+                  else _leaf_opt_state(state.opt, layout))
+            buf, o, loss = dpsgd_updates(buf, o0, layout, eta, gamma,
+                                         batches)
+            opt_state = o if flat_local else _flat_opt_state(o, layout)
         else:
-            params, o, loss = leaf_local_updates(
-                flatten.unflatten(mixed, layout),
-                _leaf_opt_state(state.opt, layout), batches)
-            buf = flatten.flatten(params, layout)[0]
-            opt_state = _flat_opt_state(o, layout)
+            mixed, tstate = mix_buf(buf, state.sizes, eta, gamma, layout,
+                                    state.tstate, state.round)
+            if flat_local:
+                buf, opt_state, loss = flat_local_updates(
+                    mixed, state.opt, layout, batches)
+            else:
+                params, o, loss = leaf_local_updates(
+                    flatten.unflatten(mixed, layout),
+                    _leaf_opt_state(state.opt, layout), batches)
+                buf = flatten.flatten(params, layout)[0]
+                opt_state = _flat_opt_state(o, layout)
         metrics = _flat_metrics(buf, layout, loss, gamma)
         new_state = FedState(flatten.unflatten(buf, layout), opt_state,
                              state.ratios, state.sizes,
@@ -465,7 +521,13 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
 
     def _mixing(state: FedState):
         eta = eta_fn(state)
-        return eta, topology.stable_gamma(eta, fed.gamma)
+        gamma = topology.stable_gamma(eta, fed.gamma)
+        if sparse_fmt:
+            # sparsify AFTER the stability bound: the top-D renorm
+            # preserves row sums, so the bound computed on the dense
+            # matrix is the bound of the sparse one
+            return topology.sparsify_eta(eta, fed.degree), gamma
+        return eta, gamma
 
     def round_fn(state: FedState, batches):
         if mobile:
@@ -483,16 +545,28 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
 
     def mixing_stack(state: FedState, num_rounds: int, start: int = 0):
         """Per-round mixing for the scan driver: ``(R, K, K)`` eta and
-        ``(R,)`` gamma. Static topology broadcasts the one hoisted
-        graph; a mobility scenario re-derives radio-range links every
-        round (ring transport: gated to the physical ring — links the
-        transport cannot carry never appear). ``start`` offsets into the
-        kinematic trace: a run resumed at round r continues the SAME
+        ``(R,)`` gamma — or, under ``mixing_format='sparse'``, a
+        ``topology.SparseEta`` with ``(R, K, D)`` stacks (built straight
+        from the radio-range graphs; no dense ``(R, K, K)`` intermediate
+        is ever materialized). Static topology broadcasts the one
+        hoisted graph; a mobility scenario re-derives radio-range links
+        every round (ring transport: gated to the physical ring — links
+        the transport cannot carry never appear). ``start`` offsets into
+        the kinematic trace: a run resumed at round r continues the SAME
         trajectory, so a segmented run equals an unsegmented one."""
         from repro import mobility as mobility_lib
         if not mobile:
             eta, gamma = _mixing(state)
+            if sparse_fmt:
+                return mobility_lib.constant_sparse_stacks(
+                    eta, gamma, num_rounds)
             return mobility_lib.constant_stacks(eta, gamma, num_rounds)
+        if sparse_fmt:
+            # ring+sparse is rejected at config validation, so no mask
+            return mobility_lib.sparse_scenario_stacks(
+                fed.mobility, num_rounds, fed.num_nodes, rule=mix_rule,
+                gamma_cap=fed.gamma, degree=fed.degree,
+                ratios=state.ratios, sizes=state.sizes, start=start)
         mask = None
         if isinstance(transport, transport_lib.RingShardTransport):
             mask = topology.adjacency("ring", fed.num_nodes)
@@ -536,16 +610,6 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         # round r's exchange. A constant stack (static topology) is
         # numerically identical to the hoisted round-invariant weights;
         # a mobility stack changes the graph under the scan for free.
-
-        if fed.algorithm == "dpsgd":
-            def body(s, xs):
-                idx_r, eta_r, gamma_r = xs
-                # gossip-per-step needs the whole round batch up front
-                batches = jax.tree.map(
-                    lambda arr: jax.vmap(lambda a, i: a[i])(arr, idx_r),
-                    data)
-                return round_body(s, batches, eta_r, gamma_r)
-            return jax.lax.scan(body, state, (idx, etas, gammas))
 
         # The scan carry is flat end to end: the (K, P) param buffer,
         # the Adam moments, and the transport state (e.g. gossip
@@ -595,12 +659,19 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 # renorm, scrub the rows) before anything mixes
                 sent, eta_r, quarantined = faults_lib.wire_guard(
                     sent, buf, eta_r, fed.faults.guard_threshold)
-            mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
-                                    layout, tstate, rnd, sent=sent)
-            if flat_local:
+            if fed.algorithm == "dpsgd":
+                # no once-per-round exchange: the gossip runs INSIDE the
+                # step loop (dpsgd is fault-incapable, so sent is None)
+                buf, opt_state, loss = dpsgd_updates_from_idx(
+                    buf, opt_state, layout, eta_r, gamma_r, data, idx_r)
+            elif flat_local:
+                mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
+                                        layout, tstate, rnd, sent=sent)
                 buf, opt_state, loss = flat_local_updates_from_idx(
                     mixed, opt_state, layout, data, idx_r)
             else:
+                mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
+                                        layout, tstate, rnd, sent=sent)
                 params, opt_state, loss = leaf_local_updates_from_idx(
                     flatten.unflatten(mixed, layout), opt_state,
                     data, idx_r)
@@ -663,9 +734,11 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                resident arrays are padded to a common N (ragged nodes,
                e.g. after CND dedup); sampling stays uniform over each
                node's true count.
-        eta_stack: optional explicit (num_rounds, K, K) per-round mixing
-               weights overriding :func:`mixing_stack` (round r's
-               exchange uses slice r — time-varying topologies).
+        eta_stack: optional explicit per-round mixing weights overriding
+               :func:`mixing_stack` (round r's exchange uses slice r —
+               time-varying topologies): a dense (num_rounds, K, K)
+               array, or a ``topology.SparseEta`` with (num_rounds, K, D)
+               idx/val stacks.
         gamma_stack: optional (num_rounds,) per-round step sizes; derived
                from ``eta_stack`` rows via the paper's stability bound
                when omitted.
@@ -687,12 +760,29 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 gammas = jnp.asarray(gamma_stack, jnp.float32)
         else:
             from repro import mobility as mobility_lib
-            etas = jnp.asarray(eta_stack, jnp.float32)
-            gammas = (mobility_lib.gamma_stack(etas, fed.gamma)
-                      if gamma_stack is None
-                      else jnp.asarray(gamma_stack, jnp.float32))
+            from repro.mobility import mixing as mobility_mixing
+            if isinstance(eta_stack, topology.SparseEta):
+                etas = topology.SparseEta(
+                    jnp.asarray(eta_stack.idx, jnp.int32),
+                    jnp.asarray(eta_stack.val, jnp.float32))
+                gammas = (mobility_mixing.sparse_gamma_stack(etas,
+                                                             fed.gamma)
+                          if gamma_stack is None
+                          else jnp.asarray(gamma_stack, jnp.float32))
+            else:
+                etas = jnp.asarray(eta_stack, jnp.float32)
+                gammas = (mobility_lib.gamma_stack(etas, fed.gamma)
+                          if gamma_stack is None
+                          else jnp.asarray(gamma_stack, jnp.float32))
         k = fed.num_nodes
-        if etas.shape != (num_rounds, k, k):
+        if isinstance(etas, topology.SparseEta):
+            d = etas.degree
+            if (etas.idx.shape != (num_rounds, k, d)
+                    or etas.val.shape != (num_rounds, k, d)):
+                raise ValueError(
+                    f"sparse eta stack shapes idx={etas.idx.shape} "
+                    f"val={etas.val.shape} != {(num_rounds, k, d)}")
+        elif etas.shape != (num_rounds, k, k):
             raise ValueError(f"eta stack shape {etas.shape} != "
                              f"{(num_rounds, k, k)}")
         if gammas.shape != (num_rounds,):
@@ -708,7 +798,15 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             # computed on the unmasked stack stays valid
             plan = faults_lib.compile_plan(fed.faults, num_rounds, k,
                                            start=start)
-            etas = mobility_mixing.masked_eta_stack(etas, plan.link_mask)
+            if isinstance(etas, topology.SparseEta):
+                # the (R, K, K) link mask compiles to per-edge edits of
+                # the kept idx/val pairs — the dense mask matrix never
+                # meets the mixing math
+                etas = mobility_mixing.masked_sparse_stack(
+                    etas, jnp.asarray(plan.link_mask))
+            else:
+                etas = mobility_mixing.masked_eta_stack(etas,
+                                                        plan.link_mask)
             fault_xs = (jnp.asarray(plan.health),
                         jnp.asarray(plan.byz),
                         jnp.asarray(plan.corrupt),

@@ -7,10 +7,85 @@ with Ë_i = E_i' / E_i the CND distinct-data ratio (eq. 7).
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.registry import mixing_policies
+
+
+class SparseEta(NamedTuple):
+    """Top-D sparse mixing weights: per-node neighbor indices + weights.
+
+    ``idx[..., k, d]`` is the node index of k's d-th neighbor and
+    ``val[..., k, d]`` its mixing weight; row k of a dense eta is
+    recovered by scatter-adding ``val`` at ``idx`` (:func:`densify_eta`).
+    Empty slots (isolated nodes, degree padding) carry ``val == 0`` so
+    their ``idx`` may point anywhere — a gathered row scaled by zero
+    contributes nothing, which makes an all-zero row the same
+    partition-safe pure-self-update the dense path has. Being a
+    NamedTuple this is a JAX pytree: ``(R, K, D)`` stacks ride
+    ``lax.scan`` xs and slice per round exactly like dense stacks, at
+    O(R·K·D) memory instead of O(R·K²).
+    """
+
+    idx: jnp.ndarray            # int32 (..., K, D)
+    val: jnp.ndarray            # f32   (..., K, D)
+
+    @property
+    def degree(self) -> int:
+        return self.idx.shape[-1]
+
+
+def validate_degree(degree: int, k: int) -> int:
+    """A requested top-D degree must satisfy 1 <= D <= K-1: each node
+    has at most K-1 possible neighbors (no self loops). Rejecting
+    D > K-1 loudly (instead of silently clamping) catches configs that
+    assume a denser graph than K supports."""
+    degree = int(degree)
+    if not 1 <= degree <= k - 1:
+        raise ValueError(
+            f"degree={degree} out of range for K={k} nodes: need "
+            f"1 <= degree <= K-1 = {k - 1} (each node has at most K-1 "
+            f"neighbors; requesting more would silently clamp)")
+    return degree
+
+
+def sparsify_eta(eta: jnp.ndarray, degree: int) -> SparseEta:
+    """Dense (..., K, K) eta -> top-``degree`` :class:`SparseEta`.
+
+    Keeps each row's ``degree`` largest weights and rescales the
+    survivors to the row's ORIGINAL mass, so row sums — and hence the
+    gamma stability bound — are unchanged. Rows with fewer than
+    ``degree`` nonzeros keep all of them (zero-padded slots), and
+    all-zero rows stay all-zero (pure self-update, never NaN).
+    """
+    k = eta.shape[-1]
+    degree = validate_degree(degree, k)
+    eta32 = jnp.asarray(eta, jnp.float32)
+    val, idx = jax.lax.top_k(eta32, degree)
+    kept = jnp.maximum(val, 0.0)              # eta is nonnegative
+    mass = eta32.sum(axis=-1)
+    keptmass = kept.sum(axis=-1)
+    scale = jnp.where(keptmass > 0,
+                      mass / jnp.maximum(keptmass, 1e-12), 0.0)
+    return SparseEta(idx=idx.astype(jnp.int32),
+                     val=kept * scale[..., None])
+
+
+def densify_eta(sp: SparseEta, k: int) -> jnp.ndarray:
+    """Scatter a :class:`SparseEta` back to a dense (..., K, K) eta.
+
+    Zero-weight slots scatter nothing regardless of their index, so
+    padded/isolated rows come back all-zero. Duplicate indices add —
+    the inverse convention of :func:`sparsify_eta`, which never emits
+    duplicates."""
+    idx = jnp.asarray(sp.idx)
+    val = jnp.asarray(sp.val, jnp.float32)
+    one_hot = (idx[..., None] == jnp.arange(k)).astype(jnp.float32)
+    return jnp.einsum("...kd,...kdi->...ki", val, one_hot)
 
 
 def adjacency(kind: str, k: int, *, seed: int = 0,
@@ -117,14 +192,23 @@ ALGORITHM_MIXING = {
 
 def mixing_weights(adj: jnp.ndarray, rule: str,
                    ratios: jnp.ndarray | None = None,
-                   sizes: jnp.ndarray | None = None) -> jnp.ndarray:
+                   sizes: jnp.ndarray | None = None,
+                   degree: int | None = None):
     """Dispatch to the selected mixing policy (a
     ``repro.registry.mixing_policies`` plugin) on ONE (possibly
     weighted) (K, K) adjacency. Weighted adjacencies (mobility link
     quality) compose naturally: every rule multiplies its per-neighbor
     weight by the link weight before row-normalizing, and rows with no
-    neighbors come out all-zero (pure self-update) rather than NaN."""
-    return mixing_policies.get(rule)(adj, ratios=ratios, sizes=sizes)
+    neighbors come out all-zero (pure self-update) rather than NaN.
+
+    ``degree`` requests the sparse top-D format: the dense eta is
+    sparsified to a :class:`SparseEta` of per-row top-``degree``
+    weights (mass-preserving). D outside [1, K-1] raises — never a
+    silent clamp."""
+    eta = mixing_policies.get(rule)(adj, ratios=ratios, sizes=sizes)
+    if degree is None:
+        return eta
+    return sparsify_eta(eta, degree)
 
 
 def renormalize_rows(eta: jnp.ndarray,
@@ -145,17 +229,22 @@ def renormalize_rows(eta: jnp.ndarray,
     return eta * scale[:, None]
 
 
-def max_row_sum(eta: jnp.ndarray) -> jnp.ndarray:
-    """∇ = max_k sum_i eta[k,i] — paper's bound: gamma in (0, 1/∇)."""
+def max_row_sum(eta) -> jnp.ndarray:
+    """∇ = max_k sum_i eta[k,i] — paper's bound: gamma in (0, 1/∇).
+    Sparse rows sum over their D kept weights (same quantity — the
+    dropped entries are zero by construction)."""
+    if isinstance(eta, SparseEta):
+        return eta.val.sum(axis=-1).max()
     return eta.sum(axis=1).max()
 
 
-def stable_gamma(eta: jnp.ndarray, cap: float) -> jnp.ndarray:
-    """Consensus step size for ONE round's eta: the configured ``cap``
-    clipped to the paper's stability bound gamma < 1/∇ (0.99 safety
-    factor; empty graphs — ∇ = 0 — keep the cap, eq. 5 then degrades to
-    a self-update regardless of gamma). The ONE definition shared by the
-    trainer's hoisted path and the mobility per-round stacks."""
+def stable_gamma(eta, cap: float) -> jnp.ndarray:
+    """Consensus step size for ONE round's eta (dense or sparse): the
+    configured ``cap`` clipped to the paper's stability bound
+    gamma < 1/∇ (0.99 safety factor; empty graphs — ∇ = 0 — keep the
+    cap, eq. 5 then degrades to a self-update regardless of gamma). The
+    ONE definition shared by the trainer's hoisted path and the
+    mobility per-round stacks."""
     return jnp.minimum(jnp.asarray(cap, jnp.float32),
                        0.99 / jnp.maximum(max_row_sum(eta), 1e-6))
 

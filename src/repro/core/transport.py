@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import flatten
+from repro.core.topology import SparseEta
 from repro.registry import transports, wire_codecs
 
 
@@ -203,26 +204,40 @@ class DenseTransport(_FlatTransport):
     simulate_wire: bool = False
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None, sent=None):
+        sparse = isinstance(eta, SparseEta)
         if sent is None:
             wire = _fused_wire(self.codec, buf, simulate=self.simulate_wire)
-            out = flatten.mix_flat(buf, eta, gamma,
-                                   use_kernel=self.use_kernel, wire=wire)
+            if sparse:
+                out = flatten.sparse_mix_flat(buf, eta.idx, eta.val, gamma,
+                                              use_kernel=self.use_kernel,
+                                              wire=wire)
+            else:
+                out = flatten.mix_flat(buf, eta, gamma,
+                                       use_kernel=self.use_kernel,
+                                       wire=wire)
             return out, state
         # fault-injected exchange: per-node wire payloads (``sent``)
         # diverge from the master buffer, so the neighbor terms read the
         # codec'd payloads while the self-cancellation term keeps each
-        # node's OWN clean buffer (a node never receives itself).
+        # node's OWN clean buffer (a node never receives itself). The
+        # codec applies per GATHERED row on the sparse path: the gather
+        # reads the codec'd payload matrix, so each of a node's D
+        # neighbor reads sees the decoded wire representation.
         codec = self.codec
         if _cast_noops(codec, buf, self.simulate_wire):
             w_nb, w_self = sent, buf
         else:
             w_nb = codec.roundtrip(sent)
             w_self = codec.roundtrip(buf)
-        eta32 = eta.astype(buf.dtype)
-        row = eta32.sum(axis=1)
         g = jnp.asarray(gamma, buf.dtype)
-        out = buf + g * (flatten.matmul_nodes(eta32, w_nb)
-                         - row[:, None] * w_self)
+        if sparse:
+            row = eta.val.astype(buf.dtype).sum(axis=1)
+            mixed = flatten.sparse_neighbor_sum(eta.idx, eta.val, w_nb)
+        else:
+            eta32 = eta.astype(buf.dtype)
+            row = eta32.sum(axis=1)
+            mixed = flatten.matmul_nodes(eta32, w_nb)
+        out = buf + g * (mixed - row[:, None] * w_self)
         return out, state
 
 
@@ -249,6 +264,12 @@ class RingShardTransport(_FlatTransport):
         k = buf.shape[0]
         if k < 3:
             raise ValueError(f"ring transport needs K >= 3 nodes, got {k}")
+        if isinstance(eta, SparseEta):
+            raise ValueError(
+                "ring transport is physically degree-2 (the {k-1, k+1} "
+                "shifts ARE its topology) — sparse top-D eta has nothing "
+                "to gather here; use the dense or gossip transport with "
+                "mixing_format='sparse'")
         idx = jnp.arange(k)
         eta32 = eta.astype(buf.dtype)
         ep = eta32[idx, (idx - 1) % k][:, None]     # weight for k-1
@@ -311,20 +332,28 @@ class GossipTransport(_FlatTransport):
 
     def exchange(self, buf, eta, gamma, state=(), rnd=None, sent=None):
         codec = self.codec
+        sparse = isinstance(eta, SparseEta)
         if self.staleness == 0:
             if sent is None:
                 wire = _fused_wire(codec, buf, simulate=self.simulate_wire)
+                if sparse:
+                    return flatten.sparse_mix_flat(buf, eta.idx, eta.val,
+                                                   gamma, wire=wire), state
                 return flatten.mix_flat(buf, eta, gamma, wire=wire), state
             if _cast_noops(codec, buf, self.simulate_wire):
                 w_nb, w_self = sent, buf
             else:
                 w_nb = codec.roundtrip(sent)
                 w_self = codec.roundtrip(buf)
-            eta32 = eta.astype(buf.dtype)
-            row = eta32.sum(axis=1)
             g = jnp.asarray(gamma, buf.dtype)
-            out = buf + g * (flatten.matmul_nodes(eta32, w_nb)
-                             - row[:, None] * w_self)
+            if sparse:
+                row = eta.val.astype(buf.dtype).sum(axis=1)
+                mixed = flatten.sparse_neighbor_sum(eta.idx, eta.val, w_nb)
+            else:
+                eta32 = eta.astype(buf.dtype)
+                row = eta32.sum(axis=1)
+                mixed = flatten.matmul_nodes(eta32, w_nb)
+            out = buf + g * (mixed - row[:, None] * w_self)
             return out, state
         if rnd is None:
             raise ValueError("stale gossip needs the round index (rnd)")
@@ -341,14 +370,20 @@ class GossipTransport(_FlatTransport):
             lambda a, fresh: jax.lax.dynamic_update_index_in_dim(
                 a, fresh[None], slot, 0),
             state, codec.encode(buf if sent is None else sent))
-        eta32 = eta.astype(buf.dtype)
-        row = eta32.sum(axis=1)
         g = jnp.asarray(gamma, buf.dtype)
         # neighbor terms from the stale snapshot, self term from the
         # CURRENT buffer at wire precision (so staleness->0 recovers the
-        # synchronous delta form term by term)
+        # synchronous delta form term by term); the sparse path gathers
+        # its D stale rows from the decoded snapshot — stale-snapshot
+        # bookkeeping is format-independent
         stale = codec.decode(stale_enc, buf.dtype)
-        mixed = flatten.matmul_nodes(eta32, stale)
+        if sparse:
+            row = eta.val.astype(buf.dtype).sum(axis=1)
+            mixed = flatten.sparse_neighbor_sum(eta.idx, eta.val, stale)
+        else:
+            eta32 = eta.astype(buf.dtype)
+            row = eta32.sum(axis=1)
+            mixed = flatten.matmul_nodes(eta32, stale)
         w_self = codec.roundtrip(buf)
         out = buf + g * (mixed - row[:, None] * w_self)
         return out, new_state

@@ -236,7 +236,14 @@ def wire_guard(sent, buf, eta, threshold: float = 1e12):
     Returns ``(sent_clean, eta_used, quarantined)`` with ``quarantined``
     the (K,) 0/1 indicator. Everything is gated on ``quarantined.any()``
     so clean rounds pass eta/sent through untouched (bit-identical).
+
+    ``eta`` may be a dense (K, K) matrix or a ``topology.SparseEta``:
+    the sparse branch gathers each kept edge's sender flag (``ok[idx]``,
+    an O(K·D) edit instead of an O(K²) column zero) and renormalizes the
+    val rows the same mass-preserving way.
     """
+    from repro.core.topology import SparseEta
+
     finite = jnp.isfinite(sent).all(axis=1)
     if threshold and threshold > 0:
         blown = (jnp.nan_to_num(jnp.abs(sent), nan=jnp.inf).max(axis=1)
@@ -245,11 +252,20 @@ def wire_guard(sent, buf, eta, threshold: float = 1e12):
     else:
         bad = ~finite
     any_bad = bad.any()
-    ok = (~bad).astype(eta.dtype)
-    masked = eta * ok[None, :]
-    target = eta.sum(axis=1)
-    s = masked.sum(axis=1)
-    scale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
-    eta_used = jnp.where(any_bad, masked * scale[:, None], eta)
+    if isinstance(eta, SparseEta):
+        ok = (~bad).astype(eta.val.dtype)
+        masked = eta.val * ok[eta.idx]
+        target = eta.val.sum(axis=1)
+        s = masked.sum(axis=1)
+        scale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+        val_used = jnp.where(any_bad, masked * scale[:, None], eta.val)
+        eta_used = SparseEta(eta.idx, val_used)
+    else:
+        ok = (~bad).astype(eta.dtype)
+        masked = eta * ok[None, :]
+        target = eta.sum(axis=1)
+        s = masked.sum(axis=1)
+        scale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+        eta_used = jnp.where(any_bad, masked * scale[:, None], eta)
     sent_clean = jnp.where(any_bad, jnp.where(bad[:, None], buf, sent), sent)
     return sent_clean, eta_used, bad.astype(jnp.float32)

@@ -22,6 +22,7 @@ from repro.kernels import cnd_sketch as _cs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import robust_agg as _ra
 from repro.kernels import rwkv6_scan as _rs
+from repro.kernels import sparse_mix as _sm
 
 
 def use_pallas() -> bool:
@@ -94,6 +95,24 @@ def flat_mix(eta, master, wire, gamma, force_kernel: bool = False):
     from repro.core import flatten
     return flatten.mix_flat(master, eta, gamma, use_kernel=False,
                             wire=wire)
+
+
+@partial(jax.jit, static_argnames=("force_kernel",))
+def sparse_mix(idx, val, master, wire, gamma, force_kernel: bool = False):
+    """Top-D sparse eq.5 delta mix on the flat buffer (one gather-mix
+    kernel launch): OUT = MASTER + gamma * (gather-sum(VAL, WIRE[IDX])
+    - rowsum(VAL) * WIRE). O(K*D*P) instead of the dense O(K^2*P). Off
+    TPU this is the XLA ``take`` + ``einsum`` delta form, not the
+    interpreted kernel."""
+    if use_pallas() or force_kernel:
+        block_cols = 512 if master.shape[1] % 512 == 0 else 128
+        return _sm.sparse_mix(idx, val, master, wire, gamma,
+                              block_cols=block_cols,
+                              interpret=_interpret())
+    # one source of truth for the XLA form: flatten.sparse_mix_flat
+    from repro.core import flatten
+    return flatten.sparse_mix_flat(master, idx, val, gamma,
+                                   use_kernel=False, wire=wire)
 
 
 @partial(jax.jit, static_argnames=("force_kernel",))

@@ -18,6 +18,23 @@ def consensus_mix(w, neighbors, eta, gamma):
     return (w32 + jnp.asarray(gamma, jnp.float32) * acc).astype(w.dtype)
 
 
+def sparse_mix(idx, val, master, wire, gamma):
+    """Sparse gather-mix ground truth, dense detour: scatter the (K, D)
+    idx/val pairs to a dense eta and run the eq. 5 delta form through
+    the same matmul the dense path uses. The kernel and the XLA
+    take+einsum path are both validated against this."""
+    k = master.shape[0]
+    one_hot = (jnp.asarray(idx)[..., None] == jnp.arange(k)
+               ).astype(jnp.float32)
+    eta = jnp.einsum("kd,kdi->ki", val.astype(jnp.float32), one_hot)
+    w32 = wire.astype(jnp.float32)
+    m32 = master.astype(jnp.float32)
+    g = jnp.asarray(gamma, jnp.float32)
+    row = eta.sum(axis=1)
+    mixed = jnp.einsum("ki,ip->kp", eta, w32)
+    return (m32 + g * (mixed - row[:, None] * w32)).astype(master.dtype)
+
+
 # --- seed per-leaf consensus path (oracle for the flat-buffer engine) -------
 
 def apply_matrix_pytree(params, matrix):

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: top-D sparse gather-mix (paper eq. 5, sparse eta).
+
+    out_k = W_k + gamma * (sum_d val[k,d] * W[idx[k,d]] - rowsum_k * W_k)
+
+The dense ``flat_mix`` kernel pays an O(K^2 P) matmul even when the
+radio-range graph is bounded-degree; this kernel gathers only the D
+neighbor rows each node actually mixes with — O(K D P). The neighbor
+indices ride the scalar-prefetch channel (SMEM) so each grid step's
+BlockSpec index map can select the *data-dependent* wire row to DMA:
+the gather never materializes a dense operator.
+
+Grid: ``(P/block_cols, K, D)`` with D innermost. The out block at
+``(k, c)`` is revisited across the D steps (its index map ignores
+``dd``), so it stays resident in VMEM: step ``dd == 0`` initializes it
+with the self/row-sum term, every step accumulates one gathered
+neighbor row. P-axis tiling matches ``flat_mix`` (whole 128-lane
+columns).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sparse_mix_kernel(idx_ref, val_ref, row_ref, g_ref,
+                       master_ref, wself_ref, wnb_ref, out_ref, *,
+                       degree: int):
+    # idx_ref/val_ref: (K*D,) flattened neighbor table in SMEM;
+    # row_ref: (K,) per-node kept-weight row sums; g_ref: (1,) gamma.
+    # master_ref/wself_ref: this node's (1, block_cols) slab (f32 master,
+    # wire-precision self copy); wnb_ref: the gathered neighbor slab —
+    # which HBM row it holds was chosen by the in_spec index map from
+    # idx_ref, before the body ran.
+    kk = pl.program_id(1)
+    dd = pl.program_id(2)
+    g = g_ref[0]
+
+    @pl.when(dd == 0)
+    def _init():
+        m = master_ref[...].astype(jnp.float32)
+        ws = wself_ref[...].astype(jnp.float32)
+        out_ref[...] = (m - g * row_ref[kk] * ws).astype(out_ref.dtype)
+
+    v = val_ref[kk * degree + dd]
+    out_ref[...] += (g * v * wnb_ref[...].astype(jnp.float32)
+                     ).astype(out_ref.dtype)
+
+
+def sparse_mix(idx: jax.Array, val: jax.Array, master: jax.Array,
+               wire: jax.Array, gamma: jax.Array, *,
+               block_cols: int = 512, interpret: bool = False) -> jax.Array:
+    """Fused sparse eq.5 delta mix over the flat (K, P) buffer.
+
+    idx: (K, D) int32 neighbor indices; val: (K, D) f32 weights (zero
+    slots gather-and-discard — isolated nodes come out as pure
+    self-updates); master: (K, P) f32 master copy; wire: the buffer as
+    exchanged (master itself, a bf16 cast, or a stale gossip snapshot)
+    — only the difference terms see wire precision.
+    """
+    k, p = master.shape
+    d = idx.shape[1]
+    assert idx.shape == (k, d) and val.shape == (k, d), (idx.shape,
+                                                         val.shape)
+    assert wire.shape == (k, p), (wire.shape, master.shape)
+    assert p % block_cols == 0, (p, block_cols)
+    val32 = val.astype(jnp.float32)
+    idx_flat = idx.astype(jnp.int32).reshape(-1)
+    val_flat = val32.reshape(-1)
+    row = val32.sum(axis=1)
+    g = jnp.asarray(gamma, jnp.float32).reshape(1)
+
+    def _self(c, kk, dd, idx_r, val_r, row_r, g_r):
+        return (kk, c)
+
+    def _gather(c, kk, dd, idx_r, val_r, row_r, g_r):
+        return (idx_r[kk * d + dd], c)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(p // block_cols, k, d),
+        in_specs=[
+            pl.BlockSpec((1, block_cols), _self),      # master slab
+            pl.BlockSpec((1, block_cols), _self),      # wire self slab
+            pl.BlockSpec((1, block_cols), _gather),    # gathered neighbor
+        ],
+        out_specs=pl.BlockSpec((1, block_cols), _self),
+    )
+    return pl.pallas_call(
+        functools.partial(_sparse_mix_kernel, degree=d),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, p), master.dtype),
+        interpret=interpret,
+    )(idx_flat, val_flat, row, g, master, wire, wire)

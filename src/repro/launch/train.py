@@ -75,6 +75,16 @@ def main() -> None:
                          "consensus bytes (f32 master copy is kept)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="gossip bounded delay in rounds (0 = synchronous)")
+    ap.add_argument("--mixing-format", choices=("dense", "sparse"),
+                    default="dense",
+                    help="mixing-weight representation: dense (K,K) eta "
+                         "matrices, or sparse top-D neighbor idx/val "
+                         "pairs — O(K*D*P) gather-mix instead of the "
+                         "O(K^2*P) matmul (city-scale fleets)")
+    ap.add_argument("--degree", type=int, default=None,
+                    help="top-D neighbor cap per node with "
+                         "--mixing-format sparse (1 <= D <= K-1; "
+                         "default min(8, nodes-1))")
     ap.add_argument("--simulate-wire", action="store_true",
                     help="force the wire-dtype cast roundtrip on backends "
                          "where it would otherwise no-op-fuse (CPU "
@@ -178,7 +188,10 @@ def main() -> None:
                       algorithm=args.algorithm, transport=args.transport,
                       wire_dtype=args.wire_dtype, staleness=args.staleness,
                       simulate_wire=args.simulate_wire, mobility=mobility,
-                      faults=faults, robust=args.robust, trim=args.trim),
+                      faults=faults, robust=args.robust, trim=args.trim,
+                      mixing_format=args.mixing_format,
+                      degree=(min(8, args.nodes - 1)
+                              if args.degree is None else args.degree)),
         train=TrainConfig(learning_rate=args.lr, batch_size=args.batch))
 
     # per-node synthetic corpora with injected duplicates (the paper's

@@ -28,15 +28,22 @@ import numpy as np
 
 from repro.configs.base import MobilityConfig
 from repro.mobility import links, mixing, traces
-from repro.mobility.links import handover_stats, num_components, radio_adjacency
-from repro.mobility.mixing import constant_stacks, eta_stack, gamma_stack
+from repro.mobility.links import (degree_stats, handover_stats,
+                                  num_components, radio_adjacency,
+                                  sparse_radio_stack)
+from repro.mobility.mixing import (constant_sparse_stacks, constant_stacks,
+                                   eta_stack, gamma_stack,
+                                   masked_sparse_stack, sparse_eta_stack,
+                                   sparse_gamma_stack)
 from repro.mobility.traces import trace
 
 __all__ = [
     "MobilityConfig", "adjacency_stack", "scenario_stacks",
-    "trace", "radio_adjacency", "handover_stats", "num_components",
-    "eta_stack", "gamma_stack", "constant_stacks",
-    "links", "mixing", "traces",
+    "sparse_scenario_stacks", "trace", "radio_adjacency",
+    "sparse_radio_stack", "handover_stats", "degree_stats",
+    "num_components", "eta_stack", "gamma_stack", "sparse_eta_stack",
+    "sparse_gamma_stack", "constant_stacks", "constant_sparse_stacks",
+    "masked_sparse_stack", "links", "mixing", "traces",
 ]
 
 
@@ -75,3 +82,24 @@ def scenario_stacks(mob: MobilityConfig, rounds: int, k: int, *,
     adj = adjacency_stack(mob, rounds, k, mask=mask, start=start)
     etas = eta_stack(adj, rule, ratios=ratios, sizes=sizes)
     return etas, gamma_stack(etas, gamma_cap)
+
+
+def sparse_scenario_stacks(mob: MobilityConfig, rounds: int, k: int, *,
+                           rule: str, gamma_cap: float, degree: int,
+                           ratios=None, sizes=None,
+                           mask: np.ndarray | None = None,
+                           start: int = 0):
+    """Sparse twin of :func:`scenario_stacks`: trace -> top-``degree``
+    link rows -> sparse mixing, never materializing an ``(R, K, K)``
+    stack (only one round's ``(K, K)`` distances are transient on the
+    host). Returns ``(SparseEta (R, K, D), gammas (R,))`` ready to ride
+    the ``run_rounds`` scan at O(R·K·D) memory.
+    """
+    positions = trace(mob.kind, start + rounds, k,
+                      speed=mob.speed, speed_jitter=mob.speed_jitter,
+                      area=mob.area, dt=mob.dt, seed=mob.seed)[start:]
+    idx, val = sparse_radio_stack(positions, mob.radio_range, degree,
+                                  link_quality=mob.link_quality,
+                                  min_quality=mob.min_quality, mask=mask)
+    sp = sparse_eta_stack(idx, val, rule, ratios=ratios, sizes=sizes)
+    return sp, sparse_gamma_stack(sp, gamma_cap)

@@ -67,3 +67,88 @@ def constant_stacks(eta: jax.Array, gamma, rounds: int):
     eta = jnp.asarray(eta)
     return (jnp.broadcast_to(eta, (rounds,) + eta.shape),
             jnp.broadcast_to(jnp.asarray(gamma, jnp.float32), (rounds,)))
+
+
+# ---------------------------------------------------------------------------
+# Sparse top-D stacks: (R, K, D) idx/val instead of (R, K, K)
+# ---------------------------------------------------------------------------
+
+def _sparse_rule(idx: jax.Array, val: jax.Array, rule: str,
+                 ratios, sizes) -> jax.Array:
+    """One round's mixing weights on sparse (K, D) link rows — the
+    same four built-in policies as the dense registry, computed
+    directly on the gathered neighbor entries (``x[idx]`` replaces the
+    dense ``adj * x[None, :]`` broadcast). Rows renormalize over their
+    kept entries; all-zero rows stay zero."""
+    if rule == "metropolis":
+        deg = val.sum(axis=-1)                           # weighted degree
+        return val / (1.0 + jnp.maximum(deg[:, None], deg[idx]))
+    if rule == "cnd":
+        w = val * ratios[idx]
+    elif rule == "datasize":
+        w = val * sizes[idx].astype(jnp.float32)
+    elif rule == "uniform":
+        w = (val > 0).astype(jnp.float32)
+    else:
+        raise ValueError(
+            f"mixing rule {rule!r} has no sparse implementation "
+            f"(sparse mixing_format supports the built-in rules "
+            f"cnd/datasize/uniform/metropolis; use mixing_format="
+            f"'dense' for custom registered policies)")
+    s = w.sum(axis=-1, keepdims=True)
+    return jnp.where(s > 0, w / jnp.maximum(s, 1e-12), 0.0)
+
+
+def sparse_eta_stack(idx: jax.Array, val: jax.Array, rule: str,
+                     ratios: jax.Array | None = None,
+                     sizes: jax.Array | None = None) -> topology.SparseEta:
+    """(R, K, D) link idx/val -> per-round sparse mixing weights.
+
+    The sparse twin of :func:`eta_stack`: on graphs whose true degree
+    fits in D the result densifies to exactly what the dense rule
+    produces (the acceptance-property the sparse tests pin down)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    val = jnp.asarray(val, jnp.float32)
+    out = jax.vmap(
+        lambda i, v: _sparse_rule(i, v, rule, ratios, sizes))(idx, val)
+    return topology.SparseEta(idx=idx, val=out)
+
+
+def sparse_gamma_stack(sp: topology.SparseEta, gamma_cap: float
+                       ) -> jax.Array:
+    """(R,) per-round step sizes from a sparse stack — the same
+    ``topology.stable_gamma`` bound, row sums taken over the D kept
+    weights."""
+    return jax.vmap(
+        lambda i, v: topology.stable_gamma(topology.SparseEta(i, v),
+                                           gamma_cap)
+    )(sp.idx, sp.val)
+
+
+def masked_sparse_stack(sp: topology.SparseEta, link_mask: jax.Array
+                        ) -> topology.SparseEta:
+    """Compose a fault-plan ``(R, K, K)`` link mask into a sparse stack
+    by EDITING the (R, K, D) rows — gather each kept edge's mask bit,
+    zero dropped edges, rescale survivors to the row's pre-mask mass
+    (the sparse twin of :func:`masked_eta_stack`; crash faults zero a
+    node's whole row+column in the mask, so a crashed node's val rows
+    drain to zero the same way). The host-side mask itself stays dense
+    — fault schedules are compiled once per run, off the device hot
+    path."""
+    mask = jnp.asarray(link_mask, jnp.float32)
+    m = jnp.take_along_axis(mask, sp.idx.astype(jnp.int32), axis=-1)
+    kept = sp.val * m
+    target = sp.val.sum(axis=-1)
+    s = kept.sum(axis=-1)
+    scale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+    return topology.SparseEta(sp.idx, kept * scale[..., None])
+
+
+def constant_sparse_stacks(sp: topology.SparseEta, gamma, rounds: int):
+    """Broadcast one (K, D) sparse eta / scalar gamma to (R, K, D) /
+    (R,) — the static-topology case of the sparse scan."""
+    idx, val = jnp.asarray(sp.idx), jnp.asarray(sp.val)
+    return (topology.SparseEta(
+                jnp.broadcast_to(idx, (rounds,) + idx.shape),
+                jnp.broadcast_to(val, (rounds,) + val.shape)),
+            jnp.broadcast_to(jnp.asarray(gamma, jnp.float32), (rounds,)))

@@ -225,6 +225,24 @@ def validate_fed_config(fed) -> None:
     algorithms.validate(fed.algorithm)
     if getattr(fed, "robust", None) is not None:
         robust_rules.validate(fed.robust)
+    fmt = getattr(fed, "mixing_format", "dense")
+    if fmt not in ("dense", "sparse"):
+        raise ValueError(f"unknown mixing_format {fmt!r} "
+                         f"(choose from dense | sparse)")
+    if fmt == "sparse":
+        # degree bounds mirror topology.validate_degree (1 <= D <= K-1)
+        from repro.core.topology import validate_degree
+        validate_degree(fed.degree, fed.num_nodes)
+        if fed.transport == "ring":
+            raise ValueError(
+                "mixing_format='sparse' needs a gather-capable transport "
+                "(dense | gossip); the ring transport is physically "
+                "degree-2 — its shifts ARE its topology")
+        if getattr(fed, "robust", None) is not None:
+            raise ValueError(
+                "mixing_format='sparse' cannot combine with robust "
+                "aggregation: robust rules rank the FULL dense neighbor "
+                "column per coordinate (use mixing_format='dense')")
 
 
 def validate_fault_config(faults) -> None:
