@@ -32,6 +32,8 @@ REQUIRED_FAMILIES = (
     "mobility_",            # eta-resample + churned-scan rows
     "rwkv6_",
     "faults_",              # fault-injection scan + robust-agg rows
+    "sketch_",              # streaming-sketch update throughput rows
+    "ingest_",              # ingest-on vs off scan-overhead rows
 )
 
 

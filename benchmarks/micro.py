@@ -641,3 +641,70 @@ def bench_faults(quick: bool = False):
                  "derived": f"trimmed-mean over (K={k}, P={p}) "
                             f"neighbor rows (XLA sort path)"})
     return rows
+
+
+def bench_ingest(quick: bool = False):
+    """Redundancy-ingest cost: the streaming-sketch fold (count-min
+    scatter-add + HLL register-max) at platoon and city fleet sizes,
+    and the full in-scan overhead — duplicate scenario, sampling
+    correction AND mixing reweight all on — vs the bit-identical
+    ingest-off path (the acceptance budget is <= 5% scan overhead)."""
+    from repro.configs.base import FedConfig, IngestConfig, TrainConfig
+    from repro.configs.paper_models import MLP_CONFIG
+    from repro.core import baselines
+    from repro.data import pipeline, synthetic
+    from repro.ingest import sketches
+    from repro.models import simple
+
+    rows = []
+    cfg = IngestConfig(scenario="duplicate_heavy")
+    rng = np.random.default_rng(0)
+    for k, n, s, b in ((8, 1024, 2, 32), (1024, 256, 1, 256)):
+        ids = jnp.asarray(rng.integers(0, 1 << 30, size=(k, n),
+                                       dtype=np.int64).astype(np.int32))
+        sh = sketches.slot_hashes(ids, cfg)
+        state = sketches.init_state(k, cfg)
+        idx = jnp.asarray(rng.integers(0, n, size=(k, s, b),
+                                       dtype=np.int64).astype(np.int32))
+        fn = jax.jit(lambda st, i: sketches.update(st, sh, i))
+        us = _time(fn, state, idx)
+        items = k * s * b
+        rows.append({"name": f"sketch_update_k{k}", "us_per_call": us,
+                     "derived": f"{items / us * 1e3:.0f} items/ms "
+                                f"(K={k} nodes, {s * b} samples each)"})
+
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 5
+    ing = IngestConfig(scenario="duplicate_heavy", weighting="both")
+    nodes = [synthetic.synthetic_mnist(seed=i, n=320) for i in range(4)]
+    batcher = pipeline.FederatedBatcher(nodes, 32, 10)
+    loss = simple.make_mlp_loss(MLP_CONFIG)
+    data = {"x": jnp.asarray(np.stack([d.x for d in nodes])),
+            "y": jnp.asarray(np.stack([d.y for d in nodes]))}
+    times = {}
+    for tag, ingest in (("off", None), ("on", ing)):
+        tr = baselines.cdfl(lambda p, b: loss(p, b),
+                            FedConfig(num_nodes=4, local_steps=10,
+                                      ingest=ingest),
+                            TrainConfig(learning_rate=1e-3))
+        states = [tr.init(jax.random.PRNGKey(0),
+                          lambda r: simple.mlp_init(r, MLP_CONFIG),
+                          jnp.asarray(batcher.node_items()))
+                  for _ in range(1 + reps)]       # run_rounds donates
+
+        def run():
+            st, _ = tr.run_rounds(states.pop(), data, rounds,
+                                  rng=jax.random.PRNGKey(7))
+            return jax.tree.leaves(st.params)[0]
+
+        times[tag] = _median_time(run, reps=reps, warmup=1)
+    rows.append({"name": f"ingest_scan_off_{rounds}r",
+                 "us_per_call": times["off"],
+                 "derived": f"{times['off'] / rounds:.0f} us/round "
+                            f"(ingest-free baseline scan)"})
+    rows.append({"name": f"ingest_scan_on_{rounds}r",
+                 "us_per_call": times["on"],
+                 "derived": f"sketch fold + corrected sampling + eta "
+                            f"reweight in-scan; "
+                            f"{times['on'] / times['off']:.3f}x vs off"})
+    return rows

@@ -43,7 +43,8 @@ def main() -> None:
                    (micro.bench_scan_rounds, quick_kw),
                    (micro.bench_scan_rounds_xf, quick_kw),
                    (micro.bench_mobility, quick_kw),
-                   (micro.bench_faults, quick_kw)):
+                   (micro.bench_faults, quick_kw),
+                   (micro.bench_ingest, quick_kw)):
         for row in fn(**kw):
             json_rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},"

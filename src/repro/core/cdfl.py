@@ -81,6 +81,9 @@ from repro.core import flatten, sketch, topology
 from repro.core import transport as transport_lib
 from repro.faults import models as faults_lib
 from repro.faults import robust as robust_lib
+from repro.ingest import scenarios as ingest_scenarios
+from repro.ingest import sketches as ingest_sketches
+from repro.ingest import weighting as ingest_weighting
 from repro.optim import FlatAdamState, adam, flat_adam
 
 
@@ -96,6 +99,11 @@ class FedState(NamedTuple):
     # fault-free FedStates keep their pre-fault leaf layout (checkpoint
     # compatibility both ways)
     fstate: Any = ()
+    # ingest-subsystem state: the per-node streaming sketches
+    # (repro.ingest.sketches.SketchState) when a redundancy scenario is
+    # active, else () — same empty-pytree convention as fstate, so
+    # ingest-free FedStates keep their pre-ingest leaf layout
+    istate: Any = ()
 
 
 class Trainer(NamedTuple):
@@ -220,6 +228,30 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 "robust aggregation needs every neighbor row "
                 "materialized: use the dense transport "
                 f"(got {type(transport).__name__})")
+    # Redundancy-aware ingest: like ``faulty`` above, the decision is
+    # config-static — ``scenario="none"`` (or ingest=None) builds the
+    # exact pre-ingest graph, bit-identical runs.
+    ingest_cfg = fed.ingest
+    ingest_on = ingest_cfg is not None and ingest_cfg.active
+    ingest_plans: dict = {}       # max_items -> (src_node, src_slot, hashes)
+
+    @jax.jit
+    def _ingest_gather(data, src_node, src_slot):
+        return jax.tree.map(lambda a: a[src_node, src_slot], data)
+
+    if ingest_on and ingest_cfg.reweight_mixing:
+        if fed.algorithm == "fedavg":
+            raise ValueError(
+                "fedavg (centralized server average) has no eta rows "
+                "for the redundancy reweight to scale; use "
+                "IngestConfig(weighting='sampling') or a decentralized "
+                "algorithm")
+        if robust_fn is not None:
+            raise ValueError(
+                "robust aggregation ranks neighbor rows by order "
+                "statistics — the redundancy eta reweight does not "
+                "compose with it (use IngestConfig(weighting="
+                "'sampling'|'none'))")
     # Every algorithm runs the flat-resident pipeline: params AND Adam
     # moments live in (K, P) FedState buffers, the consensus exchange
     # and the scan carry are flat, and the local-step loop
@@ -272,8 +304,10 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             # the FedState so checkpoint/resume replays the same
             # stale payloads as an unbroken run
             fstate = buf
+        istate = (ingest_sketches.init_state(k, ingest_cfg)
+                  if ingest_on else ())
         return FedState(params, opt_state, ratios, sizes,
-                        jnp.zeros((), jnp.int32), tstate, fstate)
+                        jnp.zeros((), jnp.int32), tstate, fstate, istate)
 
     def _flat_local_step(vec, ost, batch, layout):
         """One local Adam step with params resident in the flat (P,)
@@ -516,7 +550,8 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         metrics = _flat_metrics(buf, layout, loss, gamma)
         new_state = FedState(flatten.unflatten(buf, layout), opt_state,
                              state.ratios, state.sizes,
-                             state.round + 1, tstate, state.fstate)
+                             state.round + 1, tstate, state.fstate,
+                             state.istate)
         return new_state, metrics
 
     def _mixing(state: FedState):
@@ -540,6 +575,11 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 "FedConfig.faults is set but Trainer.round drives one "
                 "round at a time — fault schedules (and the in-scan "
                 "self-healing guard) ride the run_rounds scan")
+        if ingest_on:
+            raise ValueError(
+                "FedConfig.ingest is set but Trainer.round drives one "
+                "round at a time — the streaming-redundancy sketches "
+                "ride the run_rounds scan")
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
 
@@ -588,13 +628,21 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
              donate_argnums=(0,))
     def _scan_rounds(state: FedState, data, round_keys: jax.Array,
                      num_rounds: int, max_items: int, node_sizes,
-                     etas, gammas, fault_xs):
+                     etas, gammas, fault_xs, slot_hashes):
         # (R, K, S, B) minibatch indices for ALL rounds, sampled on
         # device from per-round keys folded on the ABSOLUTE round index
         # (run_rounds derives them) — segmenting a run cannot change
         # which batches any round sees.
         shape = (fed.num_nodes, fed.local_steps, train.batch_size)
-        if node_sizes is None:
+        if ingest_on and ingest_cfg.correct_sampling:
+            # multiplicity-corrected sampling: pre-sample UNIFORMS with
+            # the same absolute-round keying and transform them inside
+            # the body through the CURRENT sketch's inverse-multiplicity
+            # CDF (the weights evolve with the stream, so the transform
+            # cannot be hoisted out of the scan)
+            idx = jax.vmap(
+                lambda k: jax.random.uniform(k, shape))(round_keys)
+        elif node_sizes is None:
             idx = jax.vmap(
                 lambda k: jax.random.randint(k, shape, 0, max_items)
             )(round_keys)
@@ -634,11 +682,32 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         if use_faults and has_straggle:
             prev0 = (buf0 if isinstance(state.fstate, tuple)
                      else state.fstate)
+        # the streaming sketches ride the carry like the transport
+        # state; () on the ingest-free path (structure is config-static,
+        # so every resumed segment agrees — same gating as fault_xs)
+        ing0 = state.istate if ingest_on else ()
 
         def body(carry, xs):
             idx_r, eta_r, gamma_r, f_r = xs
-            buf, opt_state, rnd, tstate, prev = carry
+            buf, opt_state, rnd, tstate, prev, ist = carry
             entry_buf, entry_opt = buf, opt_state
+            est = ()
+            if ingest_on:
+                if ingest_cfg.correct_sampling:
+                    # weights from the ENTRY sketch (round 0: empty
+                    # counters -> uniform), then fold this round's
+                    # samples in — no same-round feedback loop
+                    mult = ingest_sketches.multiplicity(
+                        ist.cm, slot_hashes.buckets)
+                    w = ingest_weighting.sampling_weights(
+                        mult, node_sizes, max_items)
+                    idx_r = ingest_weighting.weighted_indices(idx_r, w)
+                ist = ingest_sketches.update(ist, slot_hashes, idx_r,
+                                             decay=ingest_cfg.decay)
+                est = ingest_sketches.hll_cardinality(ist.hll)
+                if ingest_cfg.reweight_mixing:
+                    eta_r = ingest_weighting.reweight_eta(
+                        eta_r, est, ingest_cfg.spread_gate)
             sent = None
             if use_faults:
                 health_r, byz_r, corrupt_r, straggle_r = f_r
@@ -677,6 +746,8 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     data, idx_r)
                 buf = flatten.flatten(params, layout)[0]
             metrics = _flat_metrics(buf, layout, loss, gamma_r)
+            if ingest_on:
+                metrics["est_distinct"] = est
             if use_faults:
                 # post-round self-healing: crashed nodes freeze for the
                 # outage (their eta row/column was already zeroed at
@@ -695,15 +766,16 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     # next round's stale replay is THIS round's entry
                     # buffer (what the node broadcast this round)
                     prev = entry_buf
-            return (buf, opt_state, rnd + 1, tstate, prev), metrics
+            return (buf, opt_state, rnd + 1, tstate, prev, ist), metrics
 
-        (buf, opt_state, rnd, tstate, prev), metrics = jax.lax.scan(
-            body, (buf0, opt0, state.round, state.tstate, prev0),
+        (buf, opt_state, rnd, tstate, prev, ist), metrics = jax.lax.scan(
+            body, (buf0, opt0, state.round, state.tstate, prev0, ing0),
             (idx, etas, gammas, fault_xs))
         if not flat_local:
             opt_state = _flat_opt_state(opt_state, layout)
         final = FedState(flatten.unflatten(buf, layout), opt_state,
-                         state.ratios, state.sizes, rnd, tstate, prev)
+                         state.ratios, state.sizes, rnd, tstate, prev,
+                         ist)
         return final, metrics
 
     def run_rounds(state: FedState, data, num_rounds: int,
@@ -749,6 +821,25 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             rng = jax.random.PRNGKey(train.seed + 1)
         data = jax.tree.map(jnp.asarray, data)
         max_items = jax.tree.leaves(data)[0].shape[1]
+        slot_hashes = ()
+        if ingest_on:
+            # compile the redundancy scenario into the round-invariant
+            # slot -> item map and pre-hash every slot's sketch
+            # coordinates (the in-scan update then does zero hashing).
+            # Both are deterministic in (cfg, K, N) — resumed segments
+            # rebuild the SAME streams — so they are cached on the
+            # trainer: repeated run_rounds segments pay only the jitted
+            # data gather, not the host-side plan compile + hashing.
+            if max_items not in ingest_plans:
+                plan = ingest_scenarios.compile_plan(ingest_cfg,
+                                                     fed.num_nodes,
+                                                     max_items)
+                ingest_plans[max_items] = (
+                    jnp.asarray(plan.src_node), jnp.asarray(plan.src_slot),
+                    ingest_sketches.slot_hashes(jnp.asarray(plan.item_ids),
+                                                ingest_cfg))
+            src_node, src_slot, slot_hashes = ingest_plans[max_items]
+            data = _ingest_gather(data, src_node, src_slot)
         if n_items is not None:
             n_items = jnp.asarray(n_items)
         start = int(state.round)
@@ -812,7 +903,7 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                         jnp.asarray(plan.corrupt),
                         jnp.asarray(plan.straggle))
         return _scan_rounds(state, data, round_keys, num_rounds, max_items,
-                            n_items, etas, gammas, fault_xs)
+                            n_items, etas, gammas, fault_xs, slot_hashes)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
                    run_rounds=run_rounds, mixing_stack=mixing_stack)

@@ -125,14 +125,24 @@ def cardinality(bitmaps: jax.Array, estimator: str = "paper_mean") -> jax.Array:
     paper_mean      — Alg. 1 line 9: mean of per-bitmap set-bit counts.
     linear_counting — beyond-paper: -m ln(z/m) (Whang et al.), corrects the
                       collision undercount at high load factors.
+
+    A saturated sketch (all m bits set) carries no count information
+    beyond "at least ~m distinct items": both estimators clamp to their
+    documented ceilings — m for paper_mean, m·ln(m) (the z=1 value) for
+    linear_counting — instead of running off toward inf/NaN, and a
+    degenerate zero-size sketch (no hash rows or no bitmap words)
+    estimates 0 distinct items rather than NaN-ing a mean over nothing.
     """
+    if bitmaps.size == 0:                                 # H==0 or m==0
+        return jnp.float32(0.0)
+    m = jnp.float32(bitmaps.shape[-1] * 32)
     counts = set_bits(bitmaps).astype(jnp.float32)        # (H,)
     if estimator == "paper_mean":
-        return counts.mean()
+        return jnp.minimum(counts.mean(), m)
     if estimator == "linear_counting":
-        m = jnp.float32(bitmaps.shape[-1] * 32)
         z = jnp.maximum(m - counts, 1.0)                  # zero bits
-        return (-m * jnp.log(z / m)).mean()
+        cap = m * jnp.log(jnp.maximum(m, 2.0))            # z=1 ceiling
+        return jnp.minimum((-m * jnp.log(z / m)).mean(), cap)
     raise ValueError(f"unknown estimator {estimator!r}")
 
 

@@ -58,7 +58,7 @@ from repro.core.cdfl import FedState, Trainer, build_trainer
 __all__ = [
     "Experiment", "Session", "RunResult",
     "Callback", "EvalCallback", "CheckpointCallback", "ChurnLogCallback",
-    "HealthCallback",
+    "HealthCallback", "IngestCallback",
 ]
 
 
@@ -174,6 +174,27 @@ class HealthCallback(Callback):
             f"health: rounds={result.rounds} nodes={health.shape[1]} "
             f"crashed_node_rounds={crashed} quarantined={quarantined} "
             f"frozen={frozen}")
+
+
+class IngestCallback(Callback):
+    """Summarize the streaming-redundancy telemetry the scan emits when
+    ``fed.ingest`` is active (the per-round ``(R, K)`` ``est_distinct``
+    stack in ``result.metrics``): one greppable line per run with each
+    node's final effective-cardinality estimate and the fleet spread the
+    mixing reweight gates on. No-op on ingest-free runs."""
+
+    def __init__(self, print_fn: Callable[[str], None] = print):
+        self.print_fn = print_fn
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        if "est_distinct" not in result.metrics:
+            return
+        est = np.asarray(result.metrics["est_distinct"])[-1]
+        spread = float(est.max() / max(float(est.min()), 1e-9))
+        vals = " ".join(f"{v:.0f}" for v in est)
+        self.print_fn(
+            f"ingest: rounds={result.rounds} nodes={est.shape[0]} "
+            f"est_distinct=[{vals}] spread={spread:.2f}")
 
 
 # --------------------------------------------------------------------------

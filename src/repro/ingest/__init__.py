@@ -1,0 +1,38 @@
+"""Redundancy-aware ingest subsystem.
+
+The source paper's second motivation — redundant onboard-sensor data
+degrades aggregation — lands here as three layers:
+
+* :mod:`repro.ingest.sketches`  — per-node rolling count-min +
+  HyperLogLog estimators, vmapped over the fed axis and device-resident
+  next to the flat ``(K, P)`` buffer: effective-cardinality and
+  per-item multiplicity estimates maintained as batches stream in;
+* :mod:`repro.ingest.scenarios` — registry-registered redundancy
+  generators (``duplicate_heavy`` / ``sensor_overlap`` /
+  ``skewed_multiset``) compiled — like mobility traces and fault
+  schedules — into per-node item streams consumed by ``run_rounds``
+  batch sampling, zero per-round Python dispatch;
+* :mod:`repro.ingest.weighting` — distinct-count-derived per-node
+  sampling probabilities (downweight duplicates inside a node) and
+  redundancy-aware mixing weights (in-scan eta column reweighting plus
+  the static ``"redundancy"`` mixing policy), composed with mobility
+  stacks and ``stable_gamma`` exactly like fault masks.
+
+Selected by ``FedConfig.ingest`` (an :class:`repro.configs.base.
+IngestConfig`); ``None`` or ``scenario="none"`` keeps the pre-ingest
+pipeline bit-identical.
+"""
+from repro.ingest.scenarios import IngestPlan, apply_plan, compile_plan
+from repro.ingest.sketches import (SketchState, SlotHashes,
+                                   hll_cardinality, init_state,
+                                   multiplicity, slot_hashes, update)
+from repro.ingest.weighting import (redundancy_mixing, reweight_eta,
+                                    sampling_weights, weighted_indices)
+
+__all__ = [
+    "IngestPlan", "apply_plan", "compile_plan",
+    "SketchState", "SlotHashes", "init_state", "slot_hashes", "update",
+    "hll_cardinality", "multiplicity",
+    "redundancy_mixing", "reweight_eta", "sampling_weights",
+    "weighted_indices",
+]

@@ -1,0 +1,113 @@
+"""Distinct-count-derived weights: sampling probabilities + eta scaling.
+
+Two consumers of the streaming sketches:
+
+* **Sampling** — per-slot probabilities proportional to the inverse
+  count-min multiplicity estimate: a slot whose item was streamed five
+  times is sampled at ~1/5 the rate, so each DISTINCT item contributes
+  ~equally to the local gradient (``sampling_weights`` +
+  ``weighted_indices``, both inside the compiled scan).
+* **Mixing** — eta COLUMNS scaled by the neighbors' estimated effective
+  (distinct) cardinality with a mass-preserving row renorm
+  (``reweight_eta``): a duplicate-heavy neighbor's opinion is worth its
+  distinct count, not its raw count — the streaming analog of the
+  paper's eq. 6 CND weights. Row mass is preserved, so the
+  ``stable_gamma`` bound computed on the unweighted stack stays valid —
+  the same contract fault link-masks rely on.
+
+The reweight applies a SPREAD DEAD-BAND: HLL estimates carry
+~1.04/sqrt(M) relative noise (~6.5% at M=256), so scaling eta by
+estimates that agree to within the noise floor is harm without signal.
+Only when ``max(est)/min(est) > spread_gate`` does the scaled eta
+replace the original (a scalar ``jnp.where`` — exact pass-through
+below the gate). On redundancy-free data the estimates converge to
+uniform, the gate never trips, and weighted == unweighted exactly.
+
+Also registers the static ``"redundancy"`` mixing policy
+(``topology.mixing_weights(adj, "redundancy", ...)``): eq. 6 with
+effective cardinalities ``ratios * sizes`` instead of ratios alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+from repro.registry import mixing_policies
+
+
+def redundancy_mixing(adj: jnp.ndarray, ratios: jnp.ndarray,
+                      sizes: jnp.ndarray) -> jnp.ndarray:
+    """eta[k,i] ∝ adj[k,i] * Ë_i * E_i — neighbor weight proportional to
+    its estimated effective (distinct) cardinality, zero off-graph,
+    rows normalized to 1 over the neighborhood."""
+    eff = ratios * jnp.maximum(sizes.astype(jnp.float32), 1.0)
+    w = adj * eff[None, :]
+    denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+    return w / denom
+
+
+mixing_policies.register(
+    "redundancy",
+    lambda adj, *, ratios=None, sizes=None:
+        redundancy_mixing(adj, ratios, sizes))
+
+
+def mixing_scale(est: jax.Array, spread_gate: float):
+    """(K,) distinct estimates -> ((K,) column scale, scalar apply flag).
+
+    Scale is mean-normalized (a uniform fleet scales by ~1 everywhere);
+    the flag trips only when the max/min spread clears the dead-band."""
+    safe = jnp.maximum(est, 1.0)
+    spread = safe.max() / jnp.maximum(safe.min(), 1e-6)
+    return safe / safe.mean(), spread > spread_gate
+
+
+def reweight_eta(eta, est: jax.Array, spread_gate: float):
+    """Scale eta columns by estimated effective cardinality, preserving
+    each row's original mass (the stable_gamma contract). ``eta`` is a
+    dense (K, K) matrix or a ``topology.SparseEta``; below the spread
+    gate the ORIGINAL eta passes through bit-exactly."""
+    scale, apply = mixing_scale(est, spread_gate)
+    if isinstance(eta, topology.SparseEta):
+        scaled = eta.val * scale[eta.idx]
+        target = eta.val.sum(axis=-1)
+        s = scaled.sum(axis=-1)
+        rescale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+        val = jnp.where(apply, scaled * rescale[..., None], eta.val)
+        return topology.SparseEta(eta.idx, val)
+    scaled = eta * scale[None, :]
+    target = eta.sum(axis=1)
+    s = scaled.sum(axis=1)
+    rescale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+    return jnp.where(apply, scaled * rescale[:, None], eta)
+
+
+def sampling_weights(mult: jax.Array, n_items, n: int) -> jax.Array:
+    """(K, N) multiplicity estimates -> (K, N) sampling weights
+    1/max(mult, 1) (an unseen/unique item keeps weight 1; a duplicated
+    one is downweighted by its estimated stream count). Padded slots
+    beyond each node's true item count get weight 0."""
+    w = 1.0 / jnp.maximum(mult, 1.0)
+    if n_items is not None:
+        valid = jnp.arange(n, dtype=jnp.int32)[None, :] < \
+            n_items.astype(jnp.int32)[:, None]
+        w = jnp.where(valid, w, 0.0)
+    return w
+
+
+def weighted_indices(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Transform uniform draws into weighted slot indices via each
+    node's normalized CDF (inverse-transform sampling).
+
+    u: (K, ...) uniforms in [0, 1); w: (K, N) nonnegative weights.
+    Returns int32 indices with u's shape — same keying as the uniform
+    sampler, so segmentation invariance is untouched."""
+    cdf = jnp.cumsum(w, axis=1)
+    cdf = cdf / jnp.maximum(cdf[:, -1:], 1e-12)
+
+    def one(cdf_k, u_k):
+        i = jnp.searchsorted(cdf_k, u_k.ravel(), side="right")
+        return jnp.clip(i, 0, cdf_k.shape[0] - 1).reshape(u_k.shape)
+
+    return jax.vmap(one)(cdf, u).astype(jnp.int32)

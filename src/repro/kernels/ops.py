@@ -44,16 +44,30 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                                interpret=_interpret())
 
 
-@partial(jax.jit, static_argnames=("num_hashes", "m", "block_items"))
+@partial(jax.jit, static_argnames=("num_hashes", "m", "block_items",
+                                   "force_kernel"))
 def cnd_bitmaps(items, num_hashes: int = 3, m: int = 8192,
-                block_items: int = 256):
-    return _cs.cnd_bitmaps(items, num_hashes, m, block_items=block_items,
-                           interpret=_interpret())
+                block_items: int = 256, force_kernel: bool = False):
+    """CND bitmap build (paper Alg. 1 lines 1-5): Pallas one-hot
+    compare/any kernel on TPU; off TPU the scatter-based
+    ``repro.core.sketch.build_bitmaps`` oracle (identical output), never
+    the interpreted kernel."""
+    if use_pallas() or force_kernel:
+        return _cs.cnd_bitmaps(items, num_hashes, m,
+                               block_items=block_items,
+                               interpret=_interpret())
+    from repro.core import sketch
+    return sketch.build_bitmaps(items, num_hashes, m)
 
 
-@jax.jit
-def cnd_popcount(bitmaps):
-    return _cs.cnd_popcount(bitmaps, interpret=_interpret())
+@partial(jax.jit, static_argnames=("force_kernel",))
+def cnd_popcount(bitmaps, force_kernel: bool = False):
+    """Per-bitmap set-bit counts: Pallas SWAR kernel on TPU, the
+    ``repro.core.sketch.set_bits`` XLA form elsewhere."""
+    if use_pallas() or force_kernel:
+        return _cs.cnd_popcount(bitmaps, interpret=_interpret())
+    from repro.core import sketch
+    return sketch.set_bits(bitmaps)
 
 
 @partial(jax.jit, static_argnames=("block_rows", "force_kernel"))

@@ -35,11 +35,12 @@ import numpy as np
 
 from repro import registry
 from repro.checkpointing import save
-from repro.configs.base import (FaultConfig, FedConfig, MobilityConfig,
-                                RunConfig, TrainConfig)
+from repro.configs.base import (FaultConfig, FedConfig, IngestConfig,
+                                MobilityConfig, RunConfig, TrainConfig)
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.data import pipeline, redundancy, synthetic
-from repro.experiment import ChurnLogCallback, Experiment, HealthCallback
+from repro.experiment import (ChurnLogCallback, Experiment, HealthCallback,
+                              IngestCallback)
 from repro.mobility.links import LINK_QUALITIES
 
 
@@ -56,8 +57,22 @@ def main() -> None:
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--algorithm", default="cdfl",
                     choices=registry.algorithms.names())
-    ap.add_argument("--redundancy", type=float, default=0.5,
-                    help="fraction of duplicated items per node")
+    ap.add_argument("--redundancy", default="0.5",
+                    help="a float: fraction of duplicated items injected "
+                         "host-side per node (legacy CND path); or a "
+                         "registered redundancy scenario name "
+                         f"({','.join(registry.redundancy_scenarios.names())})"
+                         " — streaming sketches then estimate redundancy "
+                         "on the ingest path and drive the weights "
+                         "(needs --driver scan)")
+    ap.add_argument("--ingest-weighting", default="both",
+                    choices=("none", "mixing", "sampling", "both"),
+                    help="what the streaming-sketch estimates drive when "
+                         "--redundancy names a scenario: redundancy-aware "
+                         "mixing weights, duplicate-corrected sampling, "
+                         "both, or telemetry only")
+    ap.add_argument("--ingest-seed", type=int, default=0,
+                    help="redundancy-scenario RNG seed (deterministic)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--local-steps", type=int, default=4)
@@ -143,6 +158,21 @@ def main() -> None:
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
+    # --redundancy is overloaded: a float keeps the legacy host-side
+    # duplicate injection (static CND ratios), a scenario name activates
+    # the streaming-redundancy ingest subsystem (repro.ingest)
+    ingest = None
+    try:
+        dup_fraction = float(args.redundancy)
+    except ValueError:
+        if args.driver != "scan":
+            ap.error("--redundancy <scenario> needs --driver scan (the "
+                     "streaming sketches ride the multi-round scan)")
+        dup_fraction = 0.0
+        ingest = IngestConfig(scenario=args.redundancy,
+                              weighting=args.ingest_weighting,
+                              seed=args.ingest_seed)
+
     faults = None
     if args.faults:
         if args.driver != "scan":
@@ -191,16 +221,20 @@ def main() -> None:
                       faults=faults, robust=args.robust, trim=args.trim,
                       mixing_format=args.mixing_format,
                       degree=(min(8, args.nodes - 1)
-                              if args.degree is None else args.degree)),
+                              if args.degree is None else args.degree),
+                      ingest=ingest),
         train=TrainConfig(learning_rate=args.lr, batch_size=args.batch))
 
-    # per-node synthetic corpora with injected duplicates (the paper's
-    # redundant-data condition) — CND will see distinct ratios < 1
+    # per-node synthetic corpora. Legacy float --redundancy injects the
+    # duplicates host-side (the paper's redundant-data condition — CND
+    # sees static distinct ratios < 1); a scenario --redundancy leaves
+    # the corpora clean and lets the ingest plan rewrite the streams at
+    # run time (the streaming sketches estimate the redundancy).
     nodes = [
         redundancy.inject_duplicates(
             synthetic.token_lm(seed=i, n_seqs=n_seqs, seq_len=args.seq,
                                vocab=cfg.vocab_size),
-            1.0 - args.redundancy, seed=i)
+            1.0 - dup_fraction, seed=i)
         for i in range(args.nodes)
     ]
 
@@ -222,7 +256,8 @@ def main() -> None:
 
     if args.driver == "scan":
         result = session.run(args.rounds, callbacks=[ChurnLogCallback(),
-                                                     HealthCallback()])
+                                                     HealthCallback(),
+                                                     IngestCallback()])
         losses = np.asarray(result.metrics["loss"])
         disagrees = np.asarray(result.metrics["disagreement"])
         per_round = result.wall_time_s / max(args.rounds, 1)
@@ -247,6 +282,22 @@ def main() -> None:
             print(f"FAULT_SMOKE {'ok' if ok else 'FAIL'} "
                   f"crashed_node_rounds={crashed} "
                   f"quarantined={quarantined}")
+        if ingest is not None and "est_distinct" in result.metrics:
+            # greppable CI smoke verdict: training made progress on the
+            # redundant streams, the sketches produced finite positive
+            # estimates, and (duplicate_heavy) the affected nodes are
+            # actually measured as redundancy-heavy (fleet spread)
+            est = np.asarray(result.metrics["est_distinct"])[-1]
+            spread = float(est.max() / max(float(est.min()), 1e-9))
+            ok = (np.isfinite(losses).all()
+                  and losses[-1].mean() < losses[0].mean()
+                  and np.isfinite(est).all() and est.min() > 0
+                  and (ingest.scenario != "duplicate_heavy"
+                       or spread > 1.2))
+            print(f"INGEST_SMOKE {'ok' if ok else 'FAIL'} "
+                  f"scenario={ingest.scenario} "
+                  f"est_distinct={np.round(est, 1)} "
+                  f"spread={spread:.2f}")
         state = result.state
     else:
         trainer = session.experiment.trainer(data)

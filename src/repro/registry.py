@@ -19,7 +19,10 @@ in a :class:`Registry` rather than a string branched on in some caller:
 * :data:`fault_models`    — fault injectors compiled into device-resident
   per-round schedules (``repro.faults.models``);
 * :data:`robust_rules`    — Byzantine-robust aggregation rules replacing
-  the eq. 5 weighted mix (``repro.faults.robust``).
+  the eq. 5 weighted mix (``repro.faults.robust``);
+* :data:`redundancy_scenarios` — data-redundancy generators compiled
+  into per-node item streams on the ingest path
+  (``repro.ingest.scenarios``).
 
 Registering a plugin is one decorator at its definition site::
 
@@ -172,6 +175,7 @@ mobility_traces = Registry("mobility trace")
 algorithms = Registry("algorithm")
 fault_models = Registry("fault model")
 robust_rules = Registry("robust aggregation rule")
+redundancy_scenarios = Registry("redundancy scenario")
 
 ALL_REGISTRIES = {
     "transports": transports,
@@ -181,6 +185,7 @@ ALL_REGISTRIES = {
     "algorithms": algorithms,
     "fault_models": fault_models,
     "robust_rules": robust_rules,
+    "redundancy_scenarios": redundancy_scenarios,
 }
 
 _PLUGINS_LOADED = False
@@ -206,6 +211,8 @@ def ensure_plugins() -> None:
         import repro.mobility.traces  # noqa: F401  (mobility traces)
         import repro.faults.models    # noqa: F401  (fault models)
         import repro.faults.robust    # noqa: F401  (robust rules)
+        import repro.ingest.scenarios  # noqa: F401  (redundancy scenarios)
+        import repro.ingest.weighting  # noqa: F401  ("redundancy" policy)
         import repro.core.baselines   # noqa: F401  (algorithms)
         _PLUGINS_LOADED = True
     finally:
@@ -249,6 +256,12 @@ def validate_fault_config(faults) -> None:
     ensure_plugins()
     for kind in faults.kinds:
         fault_models.validate(kind)
+
+
+def validate_ingest_config(ing) -> None:
+    ensure_plugins()
+    if ing.scenario != "none":
+        redundancy_scenarios.validate(ing.scenario)
 
 
 def validate_mobility_config(mob) -> None:

@@ -195,3 +195,51 @@ def test_consensus_kernels_not_auto_selected_off_tpu(monkeypatch):
     # the default mix paths stay off the kernel too
     _ = flatten_mod.mix_flat(buf, eta, 0.3)
     _ = flatten_mod.apply_matrix_flat(buf, eta)
+
+
+# --- dispatch: CND sketch wrappers (PR 8) -----------------------------------
+
+def test_cnd_ops_force_kernel_matches_xla_fallback():
+    """The public ``ops.cnd_*`` wrappers hit the Pallas body under
+    ``force_kernel`` and the ``core.sketch`` oracle otherwise — both
+    must agree bit-for-bit."""
+    from repro.core import sketch
+    r = np.random.default_rng(8)
+    items = jnp.asarray(r.integers(0, 1 << 16, size=(200, 6),
+                                   dtype=np.int64).astype(np.int32))
+    auto = ops.cnd_bitmaps(items, 3, 4096)
+    forced = ops.cnd_bitmaps(items, 3, 4096, force_kernel=True)
+    oracle = sketch.build_bitmaps(items, 3, 4096)
+    assert (np.asarray(auto) == np.asarray(oracle)).all()
+    assert (np.asarray(forced) == np.asarray(oracle)).all()
+
+    counts_auto = ops.cnd_popcount(auto)
+    counts_forced = ops.cnd_popcount(forced, force_kernel=True)
+    counts_oracle = sketch.set_bits(oracle)
+    assert (np.asarray(counts_auto) == np.asarray(counts_oracle)).all()
+    assert (np.asarray(counts_forced) == np.asarray(counts_oracle)).all()
+
+
+def test_cnd_kernels_not_auto_selected_off_tpu(monkeypatch):
+    """Same contract as the consensus wrappers: off TPU the ``ops.cnd_*``
+    entry points lower to the XLA oracle, never the interpreted kernel."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU dispatch behavior")
+    from repro.kernels import cnd_sketch as cs
+
+    assert not ops.use_pallas()
+
+    def boom(*a, **k):
+        raise AssertionError("CND Pallas kernel auto-selected off TPU")
+
+    monkeypatch.setattr(cs, "cnd_bitmaps", boom)
+    monkeypatch.setattr(cs, "cnd_popcount", boom)
+
+    # fresh shapes so the poisoned module is actually retraced
+    r = np.random.default_rng(9)
+    items = jnp.asarray(r.integers(0, 1 << 16, size=(65, 3),
+                                   dtype=np.int64).astype(np.int32))
+    bm = ops.cnd_bitmaps(items, 2, 2048)
+    assert bm.shape == (2, 2048 // 32)
+    counts = ops.cnd_popcount(bm)
+    assert counts.shape == (2,)

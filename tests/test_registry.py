@@ -64,7 +64,7 @@ def test_builtin_plugins_registered():
     assert registry.transports.names() == ("dense", "gossip", "ring")
     assert registry.wire_codecs.names() == ("bf16", "f32")
     assert set(registry.mixing_policies.names()) == {
-        "cnd", "datasize", "uniform", "metropolis"}
+        "cnd", "datasize", "uniform", "metropolis", "redundancy"}
     assert registry.mobility_traces.names() == (
         "manhattan", "platoon", "waypoint")
     assert set(registry.algorithms.names()) == {
@@ -72,6 +72,8 @@ def test_builtin_plugins_registered():
     assert registry.fault_models.names() == (
         "byzantine", "corrupt", "crash", "link_drop", "straggle")
     assert registry.robust_rules.names() == ("median", "trimmed_mean")
+    assert registry.redundancy_scenarios.names() == (
+        "duplicate_heavy", "sensor_overlap", "skewed_multiset")
 
 
 def test_algorithm_specs_carry_mixing_and_transport_flags():

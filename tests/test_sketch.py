@@ -79,6 +79,36 @@ def test_distinct_ratio_tracks_redundancy():
     assert 0.35 < r_half < 0.6
 
 
+def test_cardinality_saturated_bitmaps_clamped():
+    """An all-ones sketch (every bucket hit) must saturate at the
+    documented ceilings, not overflow: paper_mean caps at m set bits,
+    linear_counting at its z=1 ceiling m*ln(m) — both finite."""
+    full = jnp.full((3, 8), 0xFFFFFFFF, dtype=jnp.uint32)   # m = 256
+    paper = float(sketch.cardinality(full, "paper_mean"))
+    assert paper == 256.0
+    lc = float(sketch.cardinality(full, "linear_counting"))
+    assert np.isfinite(lc)
+    assert lc == pytest.approx(256.0 * np.log(256.0))
+    # a row with real zero bits pulls the mean strictly below the cap
+    nearly = full.at[0, 0].set(0x0000FFFF)
+    assert float(sketch.cardinality(nearly, "linear_counting")) < lc
+
+
+def test_cardinality_degenerate_sketches_estimate_zero():
+    for shape in [(0, 8), (3, 0), (0, 0)]:
+        bm = jnp.zeros(shape, dtype=jnp.uint32)
+        for est in ("paper_mean", "linear_counting"):
+            v = float(sketch.cardinality(bm, est))
+            assert np.isfinite(v) and v == 0.0
+
+
+def _cnd_rel_error(distinct, seed):
+    items = _items(max(distinct, 1) * 2, distinct, seed=seed)
+    bm = sketch.build_bitmaps(items, 3, 8192)
+    est = float(sketch.cardinality(bm, "linear_counting"))
+    return abs(est - distinct) / distinct
+
+
 def test_simhash_deterministic_and_binary():
     items = _items(64, 64)
     s1 = sketch.simhash(items)
@@ -120,3 +150,32 @@ if HAVE_HYPOTHESIS:
         bm = sketch.build_bitmaps(items, h, m)
         assert bm.shape == (h, m // 32)
         assert int(sketch.set_bits(bm).max()) <= min(n, m)
+
+    @settings(max_examples=25, deadline=None)
+    @given(distinct=st.integers(1, 1500),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_cnd_cardinality_bounded_error(distinct, seed):
+        """Random 2x-duplicated multisets, including the all-duplicate
+        (distinct=1) extreme: linear-counting error stays within the
+        m=8192 load bound."""
+        assert _cnd_rel_error(distinct, seed) < 0.25
+
+    @settings(max_examples=20, deadline=None)
+    @given(na=st.integers(1, 400), nb=st.integers(1, 400),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_union_at_least_max_part(na, nb, seed):
+        """Bitwise-OR union monotonicity: the union estimate is never
+        below either part's own estimate."""
+        bma = sketch.build_bitmaps(_items(na, na, seed=seed), 3, 8192)
+        bmb = sketch.build_bitmaps(_items(nb, nb, seed=seed + 1), 3, 8192)
+        union = float(sketch.union_cardinality(bma, bmb, "linear_counting"))
+        ca = float(sketch.cardinality(bma, "linear_counting"))
+        cb = float(sketch.cardinality(bmb, "linear_counting"))
+        assert union >= max(ca, cb) - 1e-4
+else:                                                  # pragma: no cover
+    def test_property_cnd_cardinality_bounded_error():
+        rng = np.random.default_rng(1)
+        for _ in range(25):
+            distinct = int(rng.integers(1, 1500))
+            assert _cnd_rel_error(distinct,
+                                  int(rng.integers(2**31))) < 0.25
