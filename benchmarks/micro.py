@@ -708,3 +708,70 @@ def bench_ingest(quick: bool = False):
                             f"reweight in-scan; "
                             f"{times['on'] / times['off']:.3f}x vs off"})
     return rows
+
+
+def bench_hierarchy(quick: bool = False):
+    """Two-tier hierarchical consensus at city scale: the per-node-gamma
+    cluster gather-mix + sparse leader mix (O(K·Dc·P)) vs the flat dense
+    (K,K)@(K,P) eq. 5 matmul on the SAME Manhattan radio graph, plus the
+    full-horizon stack compile cost. The derived column also records the
+    gamma decoupling the hierarchy buys: the mean cluster-local step
+    size vs the global stable_gamma bound set by the fleet's densest
+    intersection (guarded, with the speed, by
+    ``benchmarks.check_schema``)."""
+    from repro.configs.base import MobilityConfig
+    from repro.core import flatten
+    from repro.hierarchy import mixing as hier
+    from repro.mobility import adjacency_stack, eta_stack, gamma_stack
+
+    rows = []
+    p = 1280
+    fleet = (256,) if quick else (256, 1024)
+    reps = 3 if quick else 7
+    rng = np.random.default_rng(0)
+    mob = MobilityConfig(kind="manhattan", radio_range=500.0, speed=10.0,
+                         seed=0)
+    for k in fleet:
+        h, gammas = hier.hier_scenario_stacks(
+            mob, 1, k, rule="metropolis", gamma_cap=2.0,
+            ratios=jnp.ones(k), sizes=jnp.full((k,), 160.0),
+            max_cluster_size=16, leader_policy="degree", inter_degree=4)
+        h0 = jax.tree.map(lambda a: a[0], h)
+        gamma0 = gammas[0]
+        adj = adjacency_stack(mob, 1, k)
+        eta_d = eta_stack(adj, "metropolis")[0]
+        gamma_d = float(gamma_stack(eta_stack(adj, "metropolis"), 2.0)[0])
+        buf = jnp.asarray(rng.standard_normal((k, p)), jnp.float32)
+        hier_fn = jax.jit(lambda b: hier.hier_mix_flat(
+            b, h0, gamma0, burst_passes=0))
+        dense_fn = jax.jit(lambda b: flatten.mix_flat(
+            b, eta_d, jnp.float32(gamma_d), use_kernel=False))
+        us_h = _median_time(hier_fn, buf, reps=reps)
+        us_d = _median_time(dense_fn, buf, reps=reps)
+        g_intra = float(h0.gamma_node.mean())
+        clusters = int(np.unique(np.asarray(h0.cluster)).size)
+        rows.append({"name": f"hier_mix_k{k}", "us_per_call": us_h,
+                     "derived": f"{clusters} clusters; "
+                                f"{us_d / us_h:.1f}x vs flat dense; "
+                                f"gamma intra {g_intra:.2f} vs global "
+                                f"{gamma_d:.2f}"})
+        rows.append({"name": f"hier_dense_ref_k{k}", "us_per_call": us_d,
+                     "derived": f"flat dense (K,K)@(K,P) on the same "
+                                f"Manhattan graph (K={k}, P={p})"})
+
+    r_stack, k_stack = (6, 256) if quick else (30, 256)
+
+    def build_stack():
+        h_, _ = hier.hier_scenario_stacks(
+            mob, r_stack, k_stack, rule="metropolis", gamma_cap=2.0,
+            ratios=jnp.ones(k_stack), sizes=jnp.full((k_stack,), 160.0),
+            max_cluster_size=16, leader_policy="degree", inter_degree=4)
+        return jax.block_until_ready(h_.intra.val)
+
+    us_b = _median_time(build_stack, reps=2, warmup=1)
+    rows.append({"name": f"hier_eta_stack_k{k_stack}_r{r_stack}",
+                 "us_per_call": us_b,
+                 "derived": f"trace -> clusters -> leaders -> two-tier "
+                            f"stacks, full horizon ({us_b / r_stack:.0f} "
+                            f"us/round compile cost)"})
+    return rows

@@ -44,7 +44,8 @@ def main() -> None:
                    (micro.bench_scan_rounds_xf, quick_kw),
                    (micro.bench_mobility, quick_kw),
                    (micro.bench_faults, quick_kw),
-                   (micro.bench_ingest, quick_kw)):
+                   (micro.bench_ingest, quick_kw),
+                   (micro.bench_hierarchy, quick_kw)):
         for row in fn(**kw):
             json_rows.append(row)
             print(f"{row['name']},{row['us_per_call']:.1f},"
@@ -82,6 +83,14 @@ def main() -> None:
     print("\n# Mobility scenario sweep (MLP): accuracy / rounds-to-80% "
           "vs topology churn (static ring baseline first)")
     for row in paper_tables.mobility_sweep("mlp", max_rounds=max_rounds):
+        print(row)
+
+    print("\n# Hierarchical consensus sweep (MLP): flat dense vs "
+          "two-tier cluster consensus at growing fleet sizes "
+          "(per-tier step sizes at cap 2.0)")
+    hier_kw = (dict(max_rounds=6, fleet=(16, 64)) if args.quick
+               else dict(max_rounds=20, fleet=(16, 64, 256)))
+    for row in paper_tables.hierarchy_sweep(**hier_kw):
         print(row)
 
     if not args.skip_vgg:

@@ -209,6 +209,34 @@ class FaultConfig:
 
 
 @dataclass(frozen=True)
+class HierarchyConfig:
+    """Hierarchical cluster consensus knobs (``repro.hierarchy``).
+
+    Selected by ``FedConfig(mixing_format="hierarchical")``: mobility
+    clusters (radio components split to ``max_cluster_size`` by
+    proximity, with hysteresis) run a dense intra-cluster mix at their
+    OWN stability bound, while per-round elected leaders run a sparse
+    top-``inter_degree`` inter-cluster tier — both compiled into
+    device-resident per-round stacks consumed inside the single round
+    scan.
+    """
+
+    max_cluster_size: int = 16       # proximity-split cap per cluster
+    leader_policy: str = "degree"    # registered leader_policies name
+    inter_degree: int = 4            # leader tier: top-D adjacent clusters
+    hysteresis: bool = True          # sticky membership across rounds
+    # intra-tier mixing rule; None -> FedConfig.mixing
+    intra_rule: Optional[str] = None
+    # extra intra passes on rounds where clusters re-merge (post-
+    # partition consensus burst; 0 disables)
+    remerge_burst: int = 1
+
+    def __post_init__(self):
+        from repro.registry import validate_hierarchy_config
+        validate_hierarchy_config(self)
+
+
+@dataclass(frozen=True)
 class IngestConfig:
     """Streaming-redundancy ingest scenario + sketch/weighting knobs.
 
@@ -244,6 +272,16 @@ class IngestConfig:
     # duplication pushes the spread past 2; below the gate the original
     # eta passes through bit-exactly)
     spread_gate: float = 1.5
+    # --- drift detection on the rolling sketch -------------------------------
+    # a node whose sampled slots are mostly ABSENT from its decayed
+    # count-min (fraction of never-before-seen slots > drift_threshold)
+    # has changed data regime; its eta COLUMNS are discounted
+    # ("reweight") or zeroed ("reset") for that round — the fleet stops
+    # averaging in a model trained on the old regime until the node
+    # re-learns. 0 disables (bit-exact pre-drift pipeline).
+    drift_threshold: float = 0.0     # novel-slot fraction trigger (0 = off)
+    drift_mode: str = "reweight"     # reweight | reset
+    drift_discount: float = 0.5      # column scale under "reweight"
 
     def __post_init__(self):
         from repro.registry import validate_ingest_config
@@ -274,6 +312,21 @@ class IngestConfig:
         if self.zipf_alpha <= 0.0:
             raise ValueError(f"zipf_alpha must be > 0, "
                              f"got {self.zipf_alpha}")
+        if not 0.0 <= self.drift_threshold <= 1.0:
+            raise ValueError(f"drift_threshold must be in [0, 1], "
+                             f"got {self.drift_threshold}")
+        if self.drift_mode not in ("reweight", "reset"):
+            raise ValueError(f"unknown drift_mode {self.drift_mode!r} "
+                             f"(choose from reweight | reset)")
+        if not 0.0 <= self.drift_discount <= 1.0:
+            raise ValueError(f"drift_discount must be in [0, 1], "
+                             f"got {self.drift_discount}")
+        if self.drift_threshold > 0.0 and self.decay >= 1.0:
+            raise ValueError(
+                "drift detection needs a DECAYED count-min (decay < 1): "
+                "with decay=1 old regimes never age out, so every "
+                "sampled slot stays 'seen' and the novelty signal is "
+                "identically zero")
         if any(i < 0 for i in self.affected):
             raise ValueError(f"affected node indices must be >= 0, "
                              f"got {self.affected}")
@@ -290,6 +343,10 @@ class IngestConfig:
     @property
     def correct_sampling(self) -> bool:
         return self.weighting in ("sampling", "both")
+
+    @property
+    def drift_on(self) -> bool:
+        return self.drift_threshold > 0.0
 
 
 @dataclass(frozen=True)
@@ -315,8 +372,13 @@ class FedConfig:
     # builds, the default). "sparse": per-node top-``degree`` neighbor
     # idx/val pairs — (K, D) instead of (K, K), O(K·D·P) mix instead of
     # O(K²P) — the city-scale format (dense/gossip transports only).
-    mixing_format: str = "dense"     # dense | sparse
+    # "hierarchical": two-tier cluster consensus (repro.hierarchy) —
+    # dense intra-cluster mixing at per-cluster stability bounds plus a
+    # sparse leader tier (dense transport only).
+    mixing_format: str = "dense"     # dense | sparse | hierarchical
     degree: int = 8                  # sparse top-D neighbor cap
+    # hierarchical-format knobs; None -> HierarchyConfig() defaults
+    hierarchy: Optional["HierarchyConfig"] = None
     # --- consensus transport (repro.core.transport) --------------------------
     transport: str = "dense"         # registered transport plugin name
     wire_dtype: str = "f32"          # registered wire codec plugin name

@@ -76,11 +76,12 @@ import jax
 import jax.numpy as jnp
 
 from repro import registry
-from repro.configs.base import FedConfig, TrainConfig
+from repro.configs.base import FedConfig, HierarchyConfig, TrainConfig
 from repro.core import flatten, sketch, topology
 from repro.core import transport as transport_lib
 from repro.faults import models as faults_lib
 from repro.faults import robust as robust_lib
+from repro.hierarchy import mixing as hier_lib
 from repro.ingest import scenarios as ingest_scenarios
 from repro.ingest import sketches as ingest_sketches
 from repro.ingest import weighting as ingest_weighting
@@ -239,19 +240,21 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
     def _ingest_gather(data, src_node, src_slot):
         return jax.tree.map(lambda a: a[src_node, src_slot], data)
 
-    if ingest_on and ingest_cfg.reweight_mixing:
+    if ingest_on and (ingest_cfg.reweight_mixing or ingest_cfg.drift_on):
+        # both the redundancy reweight and the drift-detection column
+        # discount rescale eta inside the scan — same composition rules
         if fed.algorithm == "fedavg":
             raise ValueError(
                 "fedavg (centralized server average) has no eta rows "
-                "for the redundancy reweight to scale; use "
-                "IngestConfig(weighting='sampling') or a decentralized "
-                "algorithm")
+                "for the redundancy reweight / drift discount to scale; "
+                "use IngestConfig(weighting='sampling', "
+                "drift_threshold=0) or a decentralized algorithm")
         if robust_fn is not None:
             raise ValueError(
                 "robust aggregation ranks neighbor rows by order "
-                "statistics — the redundancy eta reweight does not "
-                "compose with it (use IngestConfig(weighting="
-                "'sampling'|'none'))")
+                "statistics — the redundancy eta reweight / drift "
+                "discount does not compose with it (use IngestConfig("
+                "weighting='sampling'|'none', drift_threshold=0))")
     # Every algorithm runs the flat-resident pipeline: params AND Adam
     # moments live in (K, P) FedState buffers, the consensus exchange
     # and the scan carry are flat, and the local-step loop
@@ -262,7 +265,19 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                train.weight_decay, train.grad_clip)
     fopt = flat_adam(train.learning_rate, train.beta1, train.beta2,
                      train.eps, train.weight_decay, train.grad_clip)
-    sparse_fmt = getattr(fed, "mixing_format", "dense") == "sparse"
+    fmt = getattr(fed, "mixing_format", "dense")
+    sparse_fmt = fmt == "sparse"
+    hier_fmt = fmt == "hierarchical"
+    # hierarchy knobs default when the format is selected bare; the
+    # intra tier inherits the algorithm's mixing rule unless pinned
+    hier_cfg = ((fed.hierarchy or HierarchyConfig()) if hier_fmt
+                else None)
+    hier_rule = (hier_cfg.intra_rule or mix_rule) if hier_fmt else None
+    if hier_fmt and not isinstance(transport, transport_lib.DenseTransport):
+        raise ValueError(
+            "mixing_format='hierarchical' needs the dense transport's "
+            "resident buffer (co-member + leader gathers); got "
+            f"{type(transport).__name__}")
     if flat_local is None:
         flat_local = jax.default_backend() != "cpu"
     # Partially unrolling the local-step scan lets XLA build larger fusion
@@ -403,7 +418,13 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
 
     def _dpsgd_mix(buf2d, eta, gamma):
         """Per-step gossip on any (K, M) 2-D view — dense delta-form
-        mix or the sparse top-D gather, matching the wire format."""
+        mix, the sparse top-D gather, or the two-tier hierarchical mix,
+        matching the wire format."""
+        if hier_fmt:
+            # no re-merge burst per STEP: dpsgd already mixes
+            # local_steps times a round, which IS the catch-up
+            return hier_lib.hier_mix_flat(buf2d, eta, gamma,
+                                          burst_passes=0)
         if isinstance(eta, topology.SparseEta):
             return flatten.sparse_mix_flat(buf2d, eta.idx, eta.val, gamma)
         return flatten.mix_flat(buf2d, eta, gamma)
@@ -488,6 +509,27 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             head, tstate = transport.exchange(buf[:, :prefix], eta, gamma,
                                               tstate, rnd)
             return jnp.concatenate([head, buf[:, prefix:]], axis=1), tstate
+        if hier_fmt:
+            # two-tier cluster consensus: codec the wire payloads the
+            # way the dense transport's fault path does (neighbor terms
+            # read the — possibly fault-overridden — codec'd frames,
+            # the self-cancellation keeps the node's own clean payload),
+            # then run intra + leader tiers + re-merge burst in one shot
+            sim = getattr(transport, "simulate_wire", False)
+            codec = transport.codec
+            if sent is None:
+                w_nb = transport_lib._fused_wire(codec, buf, sim)
+                w_self = w_nb
+            elif transport_lib._cast_noops(codec, buf, sim):
+                w_nb, w_self = sent, buf
+            else:
+                w_nb = codec.roundtrip(sent)
+                w_self = codec.roundtrip(buf)
+            mixed = hier_lib.hier_mix_flat(
+                buf, eta, gamma, wire=w_nb, wire_self=w_self,
+                use_kernel=getattr(transport, "use_kernel", None),
+                burst_passes=hier_cfg.remerge_burst)
+            return mixed, tstate
         if robust_fn is not None:
             # order-statistic consensus over the neighborhood payloads
             # (codec'd like any wire traffic) instead of eq. 5
@@ -555,6 +597,17 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return new_state, metrics
 
     def _mixing(state: FedState):
+        if hier_fmt:
+            # the index geometry depends only on the concrete static
+            # adjacency (a trace constant), so this is jit-traceable in
+            # the CND ratios like the dense rule
+            return hier_lib.hier_static_stacks(
+                adj, rule=hier_rule, ratios=state.ratios,
+                sizes=state.sizes, gamma_cap=fed.gamma,
+                max_cluster_size=hier_cfg.max_cluster_size,
+                leader_policy=hier_cfg.leader_policy,
+                inter_degree=hier_cfg.inter_degree,
+                hysteresis=hier_cfg.hysteresis)
         eta = eta_fn(state)
         gamma = topology.stable_gamma(eta, fed.gamma)
         if sparse_fmt:
@@ -597,10 +650,22 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         from repro import mobility as mobility_lib
         if not mobile:
             eta, gamma = _mixing(state)
+            if hier_fmt:
+                return hier_lib.constant_hier_stacks(eta, gamma,
+                                                     num_rounds)
             if sparse_fmt:
                 return mobility_lib.constant_sparse_stacks(
                     eta, gamma, num_rounds)
             return mobility_lib.constant_stacks(eta, gamma, num_rounds)
+        if hier_fmt:
+            return hier_lib.hier_scenario_stacks(
+                fed.mobility, num_rounds, fed.num_nodes, rule=hier_rule,
+                gamma_cap=fed.gamma, ratios=state.ratios,
+                sizes=state.sizes,
+                max_cluster_size=hier_cfg.max_cluster_size,
+                leader_policy=hier_cfg.leader_policy,
+                inter_degree=hier_cfg.inter_degree,
+                hysteresis=hier_cfg.hysteresis, start=start)
         if sparse_fmt:
             # ring+sparse is rejected at config validation, so no mask
             return mobility_lib.sparse_scenario_stacks(
@@ -692,7 +757,9 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             buf, opt_state, rnd, tstate, prev, ist = carry
             entry_buf, entry_opt = buf, opt_state
             est = ()
+            novelty = ()
             if ingest_on:
+                mult = None
                 if ingest_cfg.correct_sampling:
                     # weights from the ENTRY sketch (round 0: empty
                     # counters -> uniform), then fold this round's
@@ -702,12 +769,35 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     w = ingest_weighting.sampling_weights(
                         mult, node_sizes, max_items)
                     idx_r = ingest_weighting.weighted_indices(idx_r, w)
+                if ingest_cfg.drift_on:
+                    # drift signal: fraction of the FINAL sampled slots
+                    # the ENTRY (decayed) sketch has never seen. Gated
+                    # on the sketch having streamed anything, so the
+                    # empty round-0 counters don't read as a regime
+                    # change on every node at once.
+                    if mult is None:
+                        mult = ingest_sketches.multiplicity(
+                            ist.cm, slot_hashes.buckets)
+                    novelty = jnp.where(
+                        ist.seen > 0,
+                        ingest_weighting.drift_novelty(mult, idx_r),
+                        0.0)
                 ist = ingest_sketches.update(ist, slot_hashes, idx_r,
                                              decay=ingest_cfg.decay)
                 est = ingest_sketches.hll_cardinality(ist.hll)
                 if ingest_cfg.reweight_mixing:
                     eta_r = ingest_weighting.reweight_eta(
                         eta_r, est, ingest_cfg.spread_gate)
+                if ingest_cfg.drift_on:
+                    # drifted nodes' columns are discounted/zeroed with
+                    # mass-preserving renorm; untriggered rounds pass
+                    # eta through bit-exactly
+                    disc = (0.0 if ingest_cfg.drift_mode == "reset"
+                            else ingest_cfg.drift_discount)
+                    scale = jnp.where(
+                        novelty > ingest_cfg.drift_threshold, disc, 1.0)
+                    eta_r = ingest_weighting.scale_eta_columns(
+                        eta_r, scale)
             sent = None
             if use_faults:
                 health_r, byz_r, corrupt_r, straggle_r = f_r
@@ -746,8 +836,18 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                     data, idx_r)
                 buf = flatten.flatten(params, layout)[0]
             metrics = _flat_metrics(buf, layout, loss, gamma_r)
+            if hier_fmt:
+                # intra-tier telemetry: the gamma metric already carries
+                # the inter-tier step, this one shows what the clusters
+                # actually ran at (the gamma-decoupling the format buys)
+                metrics["gamma_intra"] = eta_r.gamma_node.mean()
+                metrics["clusters"] = (
+                    jnp.zeros((fed.num_nodes,), jnp.float32)
+                    .at[eta_r.cluster].set(1.0).sum())
             if ingest_on:
                 metrics["est_distinct"] = est
+                if ingest_cfg.drift_on:
+                    metrics["drift"] = novelty
             if use_faults:
                 # post-round self-healing: crashed nodes freeze for the
                 # outage (their eta row/column was already zeroed at
@@ -852,7 +952,12 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         else:
             from repro import mobility as mobility_lib
             from repro.mobility import mixing as mobility_mixing
-            if isinstance(eta_stack, topology.SparseEta):
+            if isinstance(eta_stack, hier_lib.HierEta):
+                etas = eta_stack
+                gammas = (hier_lib.hier_gamma_stack(etas, fed.gamma)
+                          if gamma_stack is None
+                          else jnp.asarray(gamma_stack, jnp.float32))
+            elif isinstance(eta_stack, topology.SparseEta):
                 etas = topology.SparseEta(
                     jnp.asarray(eta_stack.idx, jnp.int32),
                     jnp.asarray(eta_stack.val, jnp.float32))
@@ -866,7 +971,26 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                           if gamma_stack is None
                           else jnp.asarray(gamma_stack, jnp.float32))
         k = fed.num_nodes
-        if isinstance(etas, topology.SparseEta):
+        if isinstance(etas, hier_lib.HierEta):
+            if not hier_fmt:
+                raise ValueError(
+                    "a hierarchical eta stack needs "
+                    "mixing_format='hierarchical' (the scan body "
+                    "dispatches on the config-static format)")
+            if (etas.cluster.shape != (num_rounds, k)
+                    or etas.gamma_node.shape != (num_rounds, k)
+                    or etas.burst.shape != (num_rounds,)):
+                raise ValueError(
+                    f"hierarchical stack shapes cluster="
+                    f"{etas.cluster.shape} gamma_node="
+                    f"{etas.gamma_node.shape} burst={etas.burst.shape} "
+                    f"!= {(num_rounds, k)} / {(num_rounds,)}")
+        elif hier_fmt:
+            raise ValueError(
+                "mixing_format='hierarchical' needs a HierEta stack "
+                f"(got {type(etas).__name__}); build one with "
+                "repro.hierarchy.mixing or omit eta_stack")
+        elif isinstance(etas, topology.SparseEta):
             d = etas.degree
             if (etas.idx.shape != (num_rounds, k, d)
                     or etas.val.shape != (num_rounds, k, d)):
@@ -889,7 +1013,12 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             # computed on the unmasked stack stays valid
             plan = faults_lib.compile_plan(fed.faults, num_rounds, k,
                                            start=start)
-            if isinstance(etas, topology.SparseEta):
+            if isinstance(etas, hier_lib.HierEta):
+                # the link mask edits BOTH tiers' kept idx/val pairs —
+                # a crashed leader's cluster skips inter mixing
+                etas = hier_lib.masked_hier_stack(
+                    etas, jnp.asarray(plan.link_mask))
+            elif isinstance(etas, topology.SparseEta):
                 # the (R, K, K) link mask compiles to per-edge edits of
                 # the kept idx/val pairs — the dense mask matrix never
                 # meets the mixing math

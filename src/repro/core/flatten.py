@@ -355,6 +355,42 @@ def sparse_mix_flat(buf: jax.Array, idx: jax.Array, val: jax.Array,
     return buf + g * (mixed - row[:, None] * w32)
 
 
+def cluster_mix_flat(buf: jax.Array, idx: jax.Array, val: jax.Array,
+                     gamma_node: jax.Array,
+                     use_kernel: bool | None = None,
+                     wire: jax.Array | None = None,
+                     wire_self: jax.Array | None = None) -> jax.Array:
+    """Eq. (5) with a PER-NODE step size — the intra-cluster tier of
+    hierarchical mixing:
+
+        phi_k = W_k + g_k * (sum_d val_kd W_{idx_kd} - rowsum_k W_k)
+
+    ``gamma_node`` is a (K,) vector: each mobility cluster mixes at its
+    OWN stability bound instead of the global one (the index table only
+    points at co-cluster members, making the implied operator
+    block-diagonal). ``wire``/``wire_self`` follow the fault-path
+    convention of the dense transport: the neighbor term reads ``wire``
+    (possibly a fault-overridden, codec'd payload), the self rescale
+    reads ``wire_self`` (default ``wire``), and ``buf`` stays the f32
+    master. Dispatches to the Pallas ``kernels/cluster_mix`` kernel on
+    TPU (or on explicit ``use_kernel=True``, interpret mode); off-TPU
+    the auto path is the same D-pass gather-axpy as
+    :func:`sparse_mix_flat`."""
+    g = gamma_node.astype(buf.dtype)
+    w = buf if wire is None else wire
+    ws = w if wire_self is None else wire_self
+    if _use_kernel(use_kernel, buf.shape[1]):
+        from repro.kernels import ops
+        return ops.cluster_mix(idx, val, buf, ws, w, g,
+                               force_kernel=use_kernel is True)
+    val32 = val.astype(buf.dtype)
+    w32 = w.astype(buf.dtype)
+    ws32 = ws.astype(buf.dtype)
+    row = val32.sum(axis=1)
+    mixed = sparse_neighbor_sum(idx, val32, w32)
+    return buf + g[:, None] * (mixed - row[:, None] * ws32)
+
+
 def partial_mix_flat(buf: jax.Array, eta: jax.Array, gamma, prefix: int,
                      use_kernel: bool | None = None) -> jax.Array:
     """Eq. (5) on the first ``prefix`` buffer columns only (C-DFA(M):

@@ -58,7 +58,7 @@ from repro.core.cdfl import FedState, Trainer, build_trainer
 __all__ = [
     "Experiment", "Session", "RunResult",
     "Callback", "EvalCallback", "CheckpointCallback", "ChurnLogCallback",
-    "HealthCallback", "IngestCallback",
+    "DegreeStatsCallback", "HealthCallback", "IngestCallback",
 ]
 
 
@@ -151,6 +151,47 @@ class ChurnLogCallback(Callback):
             f"{stats['handovers']} handovers, "
             f"{stats['partitioned_rounds']}/{stats['rounds']} "
             f"partitioned rounds")
+
+
+class DegreeStatsCallback(Callback):
+    """Surface ``mobility.degree_stats`` for the rounds a run covers:
+    one greppable line at run start (mean/max degree, isolated
+    node-rounds, and the smallest lossless sparse top-D cap) and the
+    per-round ``(R,)`` stacks injected into ``result.metrics`` under
+    ``degree_max`` / ``degree_mean`` / ``degree_isolated`` at run end —
+    the observability that picks ``FedConfig.degree`` and
+    ``HierarchyConfig.max_cluster_size``. No-op on static topologies."""
+
+    def __init__(self, print_fn: Callable[[str], None] = print):
+        self.print_fn = print_fn
+        self._stats: Optional[dict] = None
+
+    def on_run_start(self, session: "Session", rounds: int) -> None:
+        self._stats = None
+        fed = session.experiment.fed
+        mob = fed.mobility
+        if mob is None or mob.kind == "static":
+            return
+        from repro import mobility as mobility_lib
+        from repro.core import topology
+        mask = (topology.adjacency("ring", fed.num_nodes)
+                if fed.transport == "ring" else None)
+        stats = mobility_lib.degree_stats(mobility_lib.adjacency_stack(
+            mob, rounds, fed.num_nodes, mask=mask,
+            start=session.rounds_completed))
+        self._stats = stats
+        self.print_fn(
+            f"degrees: mean={float(stats['mean_degree'].mean()):.1f} "
+            f"max={int(stats['max_degree'].max())} "
+            f"isolated_node_rounds={int(stats['isolated'].sum())} "
+            f"lossless_top_d={stats['max_degree_overall']}")
+
+    def on_run_end(self, session: "Session", result: "RunResult") -> None:
+        if self._stats is None:
+            return
+        result.metrics["degree_max"] = self._stats["max_degree"]
+        result.metrics["degree_mean"] = self._stats["mean_degree"]
+        result.metrics["degree_isolated"] = self._stats["isolated"]
 
 
 class HealthCallback(Callback):

@@ -237,12 +237,23 @@ def wire_guard(sent, buf, eta, threshold: float = 1e12):
     the (K,) 0/1 indicator. Everything is gated on ``quarantined.any()``
     so clean rounds pass eta/sent through untouched (bit-identical).
 
-    ``eta`` may be a dense (K, K) matrix or a ``topology.SparseEta``:
+    ``eta`` may be a dense (K, K) matrix, a ``topology.SparseEta``, or a
+    hierarchical two-tier stack (``repro.hierarchy.mixing.HierEta``):
     the sparse branch gathers each kept edge's sender flag (``ok[idx]``,
     an O(K·D) edit instead of an O(K²) column zero) and renormalizes the
-    val rows the same mass-preserving way.
+    val rows the same mass-preserving way; the hierarchical branch
+    applies that edit to BOTH tiers — a quarantined leader's cluster
+    skips inter-cluster mixing this round.
     """
     from repro.core.topology import SparseEta
+
+    if hasattr(eta, "intra"):   # HierEta: guard each tier's SparseEta
+        sent_clean, intra_used, quarantined = wire_guard(
+            sent, buf, eta.intra, threshold)
+        _, inter_used, _ = wire_guard(sent, buf, eta.inter, threshold)
+        return (sent_clean,
+                eta._replace(intra=intra_used, inter=inter_used),
+                quarantined)
 
     finite = jnp.isfinite(sent).all(axis=1)
     if threshold and threshold > 0:

@@ -1,0 +1,26 @@
+"""Hierarchical cluster consensus: mobility-driven clustering, leader
+election, and two-tier mixing (``mixing_format="hierarchical"``).
+
+Pipeline (all compiled once per run, consumed inside the round scan)::
+
+    cluster   = clustering.cluster_stack(adj_stack, pos, ...)   # (R, K)
+    leader_of = leaders.elect_leaders(cluster, adj_stack, pos)  # (R, K)
+    h, gammas = mixing.build_hier_stacks(geometry, ...)         # HierEta
+
+See ``repro.hierarchy.mixing`` for the gamma-bound argument and the
+device-side two-tier mix.
+"""
+from repro.hierarchy import clustering, leaders, mixing
+from repro.hierarchy.clustering import cluster_stack, remerge_flags
+from repro.hierarchy.leaders import elect_leaders, leader_table
+from repro.hierarchy.mixing import (HierEta, build_hier_stacks,
+                                    constant_hier_stacks, hier_gamma_stack,
+                                    hier_mix_flat, hier_scenario_stacks,
+                                    hier_static_stacks, masked_hier_stack)
+
+__all__ = [
+    "clustering", "leaders", "mixing", "cluster_stack", "remerge_flags",
+    "elect_leaders", "leader_table", "HierEta", "build_hier_stacks",
+    "constant_hier_stacks", "hier_gamma_stack", "hier_mix_flat",
+    "hier_scenario_stacks", "hier_static_stacks", "masked_hier_stack",
+]

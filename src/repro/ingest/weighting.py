@@ -66,8 +66,13 @@ def mixing_scale(est: jax.Array, spread_gate: float):
 def reweight_eta(eta, est: jax.Array, spread_gate: float):
     """Scale eta columns by estimated effective cardinality, preserving
     each row's original mass (the stable_gamma contract). ``eta`` is a
-    dense (K, K) matrix or a ``topology.SparseEta``; below the spread
-    gate the ORIGINAL eta passes through bit-exactly."""
+    dense (K, K) matrix, a ``topology.SparseEta``, or a hierarchical
+    stack (both tiers are rescaled); below the spread gate the ORIGINAL
+    eta passes through bit-exactly."""
+    if hasattr(eta, "intra"):   # repro.hierarchy.mixing.HierEta
+        return eta._replace(
+            intra=reweight_eta(eta.intra, est, spread_gate),
+            inter=reweight_eta(eta.inter, est, spread_gate))
     scale, apply = mixing_scale(est, spread_gate)
     if isinstance(eta, topology.SparseEta):
         scaled = eta.val * scale[eta.idx]
@@ -81,6 +86,47 @@ def reweight_eta(eta, est: jax.Array, spread_gate: float):
     s = scaled.sum(axis=1)
     rescale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
     return jnp.where(apply, scaled * rescale[:, None], eta)
+
+
+def scale_eta_columns(eta, scale: jax.Array):
+    """Scale eta columns by an arbitrary (K,) factor with the same
+    mass-preserving row renorm as :func:`reweight_eta` — the drift-
+    detection hook: a node whose data regime shifted gets its column
+    discounted (``scale < 1``) or zeroed (``scale == 0``, "reset") while
+    every row keeps its original mass, so the stable_gamma bound stays
+    valid. When NO column is discounted this round the original eta
+    passes through bit-exactly (a scalar ``jnp.where`` gate, like the
+    reweight spread dead-band). Handles dense (K, K), SparseEta, and
+    hierarchical stacks (both tiers)."""
+    if hasattr(eta, "intra"):   # repro.hierarchy.mixing.HierEta
+        return eta._replace(intra=scale_eta_columns(eta.intra, scale),
+                            inter=scale_eta_columns(eta.inter, scale))
+    apply = (scale < 1.0).any()
+    if isinstance(eta, topology.SparseEta):
+        scaled = eta.val * scale[eta.idx]
+        target = eta.val.sum(axis=-1)
+        s = scaled.sum(axis=-1)
+        rescale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+        val = jnp.where(apply, scaled * rescale[..., None], eta.val)
+        return topology.SparseEta(eta.idx, val)
+    scaled = eta * scale[None, :]
+    target = eta.sum(axis=1)
+    s = scaled.sum(axis=1)
+    rescale = jnp.where(s > 0, target / jnp.maximum(s, 1e-12), 0.0)
+    return jnp.where(apply, scaled * rescale[:, None], eta)
+
+
+def drift_novelty(mult: jax.Array, idx: jax.Array) -> jax.Array:
+    """Per-node novel-sample fraction: the drift signal.
+
+    mult: (K, N) pre-update count-min multiplicity estimates over every
+    slot; idx: (K, ...) this round's sampled slot indices. Returns (K,)
+    fractions of sampled slots the (decayed) sketch has effectively
+    never seen (estimate < 0.5 — counts from an old regime age toward 0
+    under ``IngestConfig.decay``, so a regime change floods the sample
+    with novel slots)."""
+    sampled = jax.vmap(lambda m, i: m[i.reshape(-1)])(mult, idx)
+    return (sampled < 0.5).mean(axis=1)
 
 
 def sampling_weights(mult: jax.Array, n_items, n: int) -> jax.Array:

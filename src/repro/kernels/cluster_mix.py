@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: block-diagonal cluster gather-mix with a
+PER-NODE gamma (hierarchical intra-cluster tier).
+
+    out_k = W_k + g[k] * (sum_d val[k,d] * W[idx[k,d]] - rowsum_k * W_k)
+
+The segment structure is keyed by cluster id at COMPILE time: the
+neighbor table (``repro.hierarchy.mixing.hier_geometry``) only ever
+points at a node's co-cluster members, so the implied dense operator is
+block-diagonal under the cluster permutation — but the kernel never
+needs the permutation, it just gathers the D listed rows. What
+distinguishes it from ``sparse_mix`` is the step size: ``g`` is a
+``(K,)`` cluster-local gamma vector (each cluster runs at its OWN
+stability bound), riding the scalar-prefetch channel next to the index
+table so the body reads ``g[kk]`` from SMEM.
+
+Grid and tiling are identical to ``sparse_mix`` (P-axis in whole
+128-lane columns like ``flat_mix``, D innermost with the out block
+resident in VMEM across the D accumulation steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cluster_mix_kernel(idx_ref, val_ref, row_ref, g_ref,
+                        master_ref, wself_ref, wnb_ref, out_ref, *,
+                        degree: int):
+    # idx_ref/val_ref: (K*D,) flattened co-member table in SMEM;
+    # row_ref: (K,) kept-weight row sums; g_ref: (K,) per-node gamma.
+    # master_ref/wself_ref: this node's (1, block_cols) slab; wnb_ref:
+    # the gathered co-member slab (row chosen by the in_spec index map
+    # from idx_ref before the body ran).
+    kk = pl.program_id(1)
+    dd = pl.program_id(2)
+    g = g_ref[kk]
+
+    @pl.when(dd == 0)
+    def _init():
+        m = master_ref[...].astype(jnp.float32)
+        ws = wself_ref[...].astype(jnp.float32)
+        out_ref[...] = (m - g * row_ref[kk] * ws).astype(out_ref.dtype)
+
+    v = val_ref[kk * degree + dd]
+    out_ref[...] += (g * v * wnb_ref[...].astype(jnp.float32)
+                     ).astype(out_ref.dtype)
+
+
+def cluster_mix(idx: jax.Array, val: jax.Array, master: jax.Array,
+                wself: jax.Array, wire: jax.Array, gamma_node: jax.Array,
+                *, block_cols: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """Fused intra-cluster eq.5 delta mix with per-node step sizes.
+
+    idx: (K, D) int32 co-member indices; val: (K, D) f32 weights (zero
+    slots gather-and-discard — singleton clusters come out as pure
+    self-updates); master: (K, P) f32 master copy; wself/wire: the
+    self/neighbor payloads as exchanged (master itself, a codec cast,
+    or a fault-overridden frame); gamma_node: (K,) cluster-local gamma.
+    """
+    k, p = master.shape
+    d = idx.shape[1]
+    assert idx.shape == (k, d) and val.shape == (k, d), (idx.shape,
+                                                         val.shape)
+    assert wire.shape == (k, p) and wself.shape == (k, p), (
+        wself.shape, wire.shape, master.shape)
+    assert gamma_node.shape == (k,), (gamma_node.shape, k)
+    assert p % block_cols == 0, (p, block_cols)
+    val32 = val.astype(jnp.float32)
+    idx_flat = idx.astype(jnp.int32).reshape(-1)
+    val_flat = val32.reshape(-1)
+    row = val32.sum(axis=1)
+    g = gamma_node.astype(jnp.float32)
+
+    def _self(c, kk, dd, idx_r, val_r, row_r, g_r):
+        return (kk, c)
+
+    def _gather(c, kk, dd, idx_r, val_r, row_r, g_r):
+        return (idx_r[kk * d + dd], c)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(p // block_cols, k, d),
+        in_specs=[
+            pl.BlockSpec((1, block_cols), _self),      # master slab
+            pl.BlockSpec((1, block_cols), _self),      # wire self slab
+            pl.BlockSpec((1, block_cols), _gather),    # gathered co-member
+        ],
+        out_specs=pl.BlockSpec((1, block_cols), _self),
+    )
+    return pl.pallas_call(
+        functools.partial(_cluster_mix_kernel, degree=d),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, p), master.dtype),
+        interpret=interpret,
+    )(idx_flat, val_flat, row, g, master, wself, wire)

@@ -22,6 +22,7 @@ from repro.kernels import cnd_sketch as _cs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import robust_agg as _ra
 from repro.kernels import rwkv6_scan as _rs
+from repro.kernels import cluster_mix as _clm
 from repro.kernels import sparse_mix as _sm
 
 
@@ -127,6 +128,27 @@ def sparse_mix(idx, val, master, wire, gamma, force_kernel: bool = False):
     from repro.core import flatten
     return flatten.sparse_mix_flat(master, idx, val, gamma,
                                    use_kernel=False, wire=wire)
+
+
+@partial(jax.jit, static_argnames=("force_kernel",))
+def cluster_mix(idx, val, master, wself, wire, gamma_node,
+                force_kernel: bool = False):
+    """Block-diagonal cluster eq.5 delta mix with a PER-NODE gamma (the
+    intra-cluster tier of hierarchical consensus): OUT = MASTER +
+    g[:, None] * (gather-sum(VAL, WIRE[IDX]) - rowsum(VAL) * WSELF).
+    The index table only lists co-cluster members, so each cluster mixes
+    at its own stability bound. Off TPU this is the XLA gather-axpy
+    delta form, not the interpreted kernel."""
+    if use_pallas() or force_kernel:
+        block_cols = 512 if master.shape[1] % 512 == 0 else 128
+        return _clm.cluster_mix(idx, val, master, wself, wire, gamma_node,
+                                block_cols=block_cols,
+                                interpret=_interpret())
+    # one source of truth for the XLA form: flatten.cluster_mix_flat
+    from repro.core import flatten
+    return flatten.cluster_mix_flat(master, idx, val, gamma_node,
+                                    use_kernel=False, wire=wire,
+                                    wire_self=wself)
 
 
 @partial(jax.jit, static_argnames=("force_kernel",))

@@ -35,6 +35,26 @@ def sparse_mix(idx, val, master, wire, gamma):
     return (m32 + g * (mixed - row[:, None] * w32)).astype(master.dtype)
 
 
+def cluster_mix(idx, val, master, wself, wire, gamma_node):
+    """Per-node-gamma cluster gather-mix ground truth, dense detour:
+    scatter the (K, D) co-member idx/val pairs to a dense block-diagonal
+    eta, then eq. 5 with a (K,) gamma vector and a split self payload:
+
+        out = master + g[:, None] * (eta @ wire - rowsum * wself)
+    """
+    k = master.shape[0]
+    one_hot = (jnp.asarray(idx)[..., None] == jnp.arange(k)
+               ).astype(jnp.float32)
+    eta = jnp.einsum("kd,kdi->ki", val.astype(jnp.float32), one_hot)
+    w32 = wire.astype(jnp.float32)
+    ws32 = wself.astype(jnp.float32)
+    m32 = master.astype(jnp.float32)
+    g = gamma_node.astype(jnp.float32)[:, None]
+    row = eta.sum(axis=1)
+    mixed = jnp.einsum("ki,ip->kp", eta, w32)
+    return (m32 + g * (mixed - row[:, None] * ws32)).astype(master.dtype)
+
+
 # --- seed per-leaf consensus path (oracle for the flat-buffer engine) -------
 
 def apply_matrix_pytree(params, matrix):

@@ -35,12 +35,13 @@ import numpy as np
 
 from repro import registry
 from repro.checkpointing import save
-from repro.configs.base import (FaultConfig, FedConfig, IngestConfig,
-                                MobilityConfig, RunConfig, TrainConfig)
+from repro.configs.base import (FaultConfig, FedConfig, HierarchyConfig,
+                                IngestConfig, MobilityConfig, RunConfig,
+                                TrainConfig)
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.data import pipeline, redundancy, synthetic
-from repro.experiment import (ChurnLogCallback, Experiment, HealthCallback,
-                              IngestCallback)
+from repro.experiment import (ChurnLogCallback, DegreeStatsCallback,
+                              Experiment, HealthCallback, IngestCallback)
 from repro.mobility.links import LINK_QUALITIES
 
 
@@ -90,16 +91,30 @@ def main() -> None:
                          "consensus bytes (f32 master copy is kept)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="gossip bounded delay in rounds (0 = synchronous)")
-    ap.add_argument("--mixing-format", choices=("dense", "sparse"),
+    ap.add_argument("--mixing-format",
+                    choices=("dense", "sparse", "hierarchical"),
                     default="dense",
                     help="mixing-weight representation: dense (K,K) eta "
-                         "matrices, or sparse top-D neighbor idx/val "
+                         "matrices, sparse top-D neighbor idx/val "
                          "pairs — O(K*D*P) gather-mix instead of the "
-                         "O(K^2*P) matmul (city-scale fleets)")
+                         "O(K^2*P) matmul (city-scale fleets) — or "
+                         "hierarchical two-tier cluster consensus "
+                         "(repro.hierarchy)")
     ap.add_argument("--degree", type=int, default=None,
                     help="top-D neighbor cap per node with "
                          "--mixing-format sparse (1 <= D <= K-1; "
                          "default min(8, nodes-1))")
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="shorthand for --mixing-format hierarchical: "
+                         "mobility clusters mix densely at their own "
+                         "stability bound, elected leaders run a sparse "
+                         "inter-cluster tier")
+    ap.add_argument("--leader-policy", default="degree",
+                    choices=registry.leader_policies.names(),
+                    help="hierarchical leader election criterion")
+    ap.add_argument("--max-cluster-size", type=int, default=16,
+                    help="proximity-split cap on hierarchical cluster "
+                         "membership (>= 2)")
     ap.add_argument("--simulate-wire", action="store_true",
                     help="force the wire-dtype cast roundtrip on backends "
                          "where it would otherwise no-op-fuse (CPU "
@@ -189,6 +204,15 @@ def main() -> None:
             straggle_rate=args.straggle_rate, byzantine=byz,
             byzantine_mode=args.byzantine_mode)
 
+    # --hierarchy is shorthand for --mixing-format hierarchical; either
+    # spelling builds the two-tier HierarchyConfig from the CLI knobs
+    if args.hierarchy:
+        args.mixing_format = "hierarchical"
+    hierarchy = None
+    if args.mixing_format == "hierarchical":
+        hierarchy = HierarchyConfig(max_cluster_size=args.max_cluster_size,
+                                    leader_policy=args.leader_policy)
+
     mobility = None
     if args.mobility != "static":
         if args.driver != "scan":
@@ -220,6 +244,7 @@ def main() -> None:
                       simulate_wire=args.simulate_wire, mobility=mobility,
                       faults=faults, robust=args.robust, trim=args.trim,
                       mixing_format=args.mixing_format,
+                      hierarchy=hierarchy,
                       degree=(min(8, args.nodes - 1)
                               if args.degree is None else args.degree),
                       ingest=ingest),
@@ -256,6 +281,7 @@ def main() -> None:
 
     if args.driver == "scan":
         result = session.run(args.rounds, callbacks=[ChurnLogCallback(),
+                                                     DegreeStatsCallback(),
                                                      HealthCallback(),
                                                      IngestCallback()])
         losses = np.asarray(result.metrics["loss"])
@@ -298,6 +324,21 @@ def main() -> None:
                   f"scenario={ingest.scenario} "
                   f"est_distinct={np.round(est, 1)} "
                   f"spread={spread:.2f}")
+        if hierarchy is not None and "gamma_intra" in result.metrics:
+            # greppable CI smoke verdict: the two-tier mix trained (finite,
+            # improving loss), the fleet actually partitioned into >= 1
+            # cluster per round, and the intra-tier step sizes are finite
+            # and positive (the per-cluster gamma path was exercised)
+            g_intra = np.asarray(result.metrics["gamma_intra"])
+            clusters = np.asarray(result.metrics["clusters"])
+            ok = (np.isfinite(losses).all()
+                  and losses[-1].mean() < losses[0].mean()
+                  and np.isfinite(g_intra).all() and g_intra.min() > 0
+                  and clusters.min() >= 1)
+            print(f"HIER_SMOKE {'ok' if ok else 'FAIL'} "
+                  f"policy={hierarchy.leader_policy} "
+                  f"clusters={np.round(clusters).astype(int).tolist()} "
+                  f"gamma_intra={np.round(g_intra, 3).tolist()}")
         state = result.state
     else:
         trainer = session.experiment.trainer(data)

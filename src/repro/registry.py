@@ -176,6 +176,7 @@ algorithms = Registry("algorithm")
 fault_models = Registry("fault model")
 robust_rules = Registry("robust aggregation rule")
 redundancy_scenarios = Registry("redundancy scenario")
+leader_policies = Registry("leader policy")
 
 ALL_REGISTRIES = {
     "transports": transports,
@@ -186,6 +187,7 @@ ALL_REGISTRIES = {
     "fault_models": fault_models,
     "robust_rules": robust_rules,
     "redundancy_scenarios": redundancy_scenarios,
+    "leader_policies": leader_policies,
 }
 
 _PLUGINS_LOADED = False
@@ -213,6 +215,7 @@ def ensure_plugins() -> None:
         import repro.faults.robust    # noqa: F401  (robust rules)
         import repro.ingest.scenarios  # noqa: F401  (redundancy scenarios)
         import repro.ingest.weighting  # noqa: F401  ("redundancy" policy)
+        import repro.hierarchy.leaders  # noqa: F401  (leader policies)
         import repro.core.baselines   # noqa: F401  (algorithms)
         _PLUGINS_LOADED = True
     finally:
@@ -233,9 +236,33 @@ def validate_fed_config(fed) -> None:
     if getattr(fed, "robust", None) is not None:
         robust_rules.validate(fed.robust)
     fmt = getattr(fed, "mixing_format", "dense")
-    if fmt not in ("dense", "sparse"):
+    if fmt not in ("dense", "sparse", "hierarchical"):
         raise ValueError(f"unknown mixing_format {fmt!r} "
-                         f"(choose from dense | sparse)")
+                         f"(choose from dense | sparse | hierarchical)")
+    if getattr(fed, "hierarchy", None) is not None and fmt != "hierarchical":
+        raise ValueError(
+            "FedConfig.hierarchy is set but mixing_format is "
+            f"{fmt!r} — hierarchy knobs only apply to "
+            "mixing_format='hierarchical'")
+    if fmt == "hierarchical":
+        if fed.transport != "dense":
+            raise ValueError(
+                "mixing_format='hierarchical' requires the dense "
+                "transport: the two-tier mix gathers arbitrary "
+                "co-cluster and leader rows from the resident buffer "
+                f"(got transport={fed.transport!r})")
+        if getattr(fed, "robust", None) is not None:
+            raise ValueError(
+                "mixing_format='hierarchical' cannot combine with "
+                "robust aggregation: robust rules rank the FULL dense "
+                "neighbor column per coordinate "
+                "(use mixing_format='dense')")
+        if fed.algorithm in ("fedavg", "cdfa_m"):
+            raise ValueError(
+                f"mixing_format='hierarchical' does not apply to "
+                f"algorithm={fed.algorithm!r}: fedavg has no "
+                f"consensus exchange and cdfa_m mixes a dense layer "
+                f"prefix (use cdfl | cfa | metropolis | dpsgd)")
     if fmt == "sparse":
         # degree bounds mirror topology.validate_degree (1 <= D <= K-1)
         from repro.core.topology import validate_degree
@@ -250,6 +277,22 @@ def validate_fed_config(fed) -> None:
                 "mixing_format='sparse' cannot combine with robust "
                 "aggregation: robust rules rank the FULL dense neighbor "
                 "column per coordinate (use mixing_format='dense')")
+
+
+def validate_hierarchy_config(hier) -> None:
+    ensure_plugins()
+    leader_policies.validate(hier.leader_policy)
+    if hier.max_cluster_size < 2:
+        raise ValueError(f"max_cluster_size must be >= 2, "
+                         f"got {hier.max_cluster_size}")
+    if hier.inter_degree < 1:
+        raise ValueError(f"inter_degree must be >= 1, "
+                         f"got {hier.inter_degree}")
+    if hier.remerge_burst < 0:
+        raise ValueError(f"remerge_burst must be >= 0, "
+                         f"got {hier.remerge_burst}")
+    if hier.intra_rule is not None:
+        mixing_policies.validate(hier.intra_rule)
 
 
 def validate_fault_config(faults) -> None:

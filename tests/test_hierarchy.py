@@ -1,0 +1,498 @@
+"""Hierarchical cluster consensus: clustering, leaders, two-tier mixing.
+
+The contract under test (``repro.hierarchy``): mobility clusters run a
+DENSE intra-cluster eq. 5 mix at their OWN stability bound while
+elected leaders run a sparse inter-cluster tier, all compiled into
+``(R, ...)`` :class:`HierEta` stacks riding the single round scan.
+Pinned down here:
+
+* the stacks themselves, on ARBITRARY random graphs (hypothesis when
+  installed, a seeded fuzz sweep locally): finite, row-substochastic,
+  intra edges never leave their cluster, per-cluster gammas shared and
+  within the cap, non-leader inter rows exactly zero;
+* the gamma decoupling the hierarchy exists for: at city scale (K=256
+  Manhattan) EVERY cluster's local gamma beats the global
+  ``stable_gamma`` bound set by the fleet's densest neighborhood;
+* exact reductions: one cluster covering the whole fleet reproduces
+  flat dense C-DFL to 1e-5 end to end;
+* composition: crash-fault link masks drain both tiers, the wire guard
+  quarantines a poisoned leader out of the inter tier, training stays
+  finite;
+* the Pallas ``cluster_mix`` kernel (interpret mode) against the numpy
+  oracle and the XLA fallback;
+* ingest drift detection: novelty flags a regime change on the decayed
+  count-min, the column discount preserves row mass, and a
+  never-triggering threshold is BIT-EXACT with drift off.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FaultConfig, FedConfig, HierarchyConfig,
+                                IngestConfig, MobilityConfig, TrainConfig)
+from repro.core import cdfl, flatten, topology
+from repro.faults import models as fault_models
+from repro.hierarchy import clustering, leaders
+from repro.hierarchy import mixing as hier
+from repro.ingest import sketches, weighting
+from repro.kernels import ops, ref
+from repro.mobility import adjacency_stack, eta_stack, gamma_stack, trace
+from repro.registry import leader_policies
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# --- clustering --------------------------------------------------------------
+
+def test_component_labels_match_known_graph():
+    adj = np.zeros((5, 5), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    adj[2, 3] = adj[3, 2] = 1.0
+    lab = clustering.component_labels(adj)
+    assert lab[0] == lab[1] and lab[2] == lab[3]
+    assert len({lab[0], lab[2], lab[4]}) == 3
+
+
+def test_cluster_stack_respects_capacity_and_canonical_labels():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 100, size=(4, 12, 2)).astype(np.float32)
+    adj = np.ones((4, 12, 12), np.float32)       # one giant component
+    adj[:, np.eye(12, dtype=bool)] = 0.0
+    c = clustering.cluster_stack(adj, pos, max_cluster_size=5)
+    assert c.shape == (4, 12) and c.dtype == np.int32
+    for t in range(4):
+        assert np.bincount(c[t]).max() <= 5
+        # canonical: labels are 0..C-1 in first-appearance order
+        assert c[t][0] == 0
+        assert set(np.unique(c[t])) == set(range(c[t].max() + 1))
+
+
+def test_cluster_hysteresis_keeps_boundary_member():
+    # round 0: {0,1,2} connected. round 1: node 2's link to 1 survives
+    # but a fresh partition would pull it elsewhere — hysteresis keeps
+    # it with the old crowd while it still hears a former co-member.
+    a0 = np.zeros((4, 4), np.float32)
+    a0[[0, 1, 1, 2], [1, 0, 2, 1]] = 1.0
+    a1 = np.zeros((4, 4), np.float32)
+    a1[[1, 2, 2, 3], [2, 1, 3, 2]] = 1.0        # 0 drops off; 3 joins
+    c = clustering.cluster_stack(np.stack([a0, a1]), None,
+                                 max_cluster_size=3)
+    assert c[0][0] == c[0][1] == c[0][2]
+    assert c[1][1] == c[1][2]                    # old mates stay together
+
+
+def test_remerge_flags_fire_on_cluster_count_drop():
+    cluster = np.array([[0, 1, 1, 2],            # 3 clusters
+                        [0, 1, 1, 1],            # 2 clusters -> burst
+                        [0, 1, 2, 3],            # 4 clusters
+                        [0, 0, 1, 1]])           # 2 clusters -> burst
+    np.testing.assert_array_equal(clustering.remerge_flags(cluster),
+                                  [0.0, 1.0, 0.0, 1.0])
+
+
+# --- leader election ---------------------------------------------------------
+
+def test_leader_policies_registered():
+    names = set(leader_policies.names())
+    assert {"degree", "centrality", "contact_duration"} <= names
+
+
+def test_elect_leaders_degree_picks_hub_within_cluster():
+    # star inside cluster {0,1,2,3}: node 1 hears everyone
+    adj = np.zeros((1, 5, 5), np.float32)
+    for j in (0, 2, 3):
+        adj[0, 1, j] = adj[0, j, 1] = 1.0
+    cluster = np.array([[0, 0, 0, 0, 1]], np.int64)
+    led = leaders.elect_leaders(cluster, adj, None, policy="degree")
+    assert led.shape == (1, 5)
+    np.testing.assert_array_equal(led[0, :4], 1)  # the hub leads
+    assert led[0, 4] == 4                         # singleton leads itself
+    # every policy returns a leader INSIDE the member's own cluster
+    for pol in leader_policies.names():
+        led_p = leaders.elect_leaders(cluster, adj, None, policy=pol)
+        for n in range(5):
+            assert cluster[0, led_p[0, n]] == cluster[0, n]
+
+
+def test_local_iteration_counts_shape_and_bounds():
+    adj = np.ones((3, 6, 6), np.float32)
+    adj[:, np.eye(6, dtype=bool)] = 0.0
+    cluster = np.stack([np.array([0, 0, 0, 1, 1, 1])] * 3)
+    its = leaders.local_iteration_counts(cluster, adj, base=1, max_iters=4)
+    assert its.shape == (3, 2)                   # (R, C) per-cluster
+    assert (its >= 1).all() and (its <= 4).all()
+    tab = leaders.leader_table(cluster,
+                               leaders.elect_leaders(cluster, adj, None))
+    assert tab.shape == (3, 2)
+    assert (cluster[0][tab[0]] == np.arange(2)).all()
+
+
+# --- stack construction (property-tested) ------------------------------------
+
+def _random_geometry(rng, k, rounds=2):
+    """Arbitrary bounded-density random graphs + positions."""
+    pos = rng.uniform(0, 60, size=(rounds, k, 2)).astype(np.float32)
+    adj = (rng.random((rounds, k, k)) < 0.45).astype(np.float32)
+    adj = adj * adj.transpose(0, 2, 1)          # symmetric
+    adj[:, np.eye(k, dtype=bool)] = 0.0
+    return adj, pos
+
+
+def _check_hier_stacks(rng, k, max_size, rule):
+    adj, pos = _random_geometry(rng, k)
+    geo = hier.hier_geometry(adj, pos, max_cluster_size=max_size,
+                             leader_policy="degree", inter_degree=3)
+    ratios = jnp.asarray(rng.uniform(0.2, 1.0, size=k).astype(np.float32))
+    sizes = jnp.full((k,), 160.0)
+    h, gammas = hier.build_hier_stacks(geo, rule=rule, ratios=ratios,
+                                       sizes=sizes, gamma_cap=0.5)
+    cluster = np.asarray(h.cluster)
+    intra_idx, intra_val = np.asarray(h.intra.idx), np.asarray(h.intra.val)
+    inter_val = np.asarray(h.inter.val)
+    gnode = np.asarray(h.gamma_node)
+    for arr in (intra_val, inter_val, gnode, np.asarray(gammas)):
+        assert np.isfinite(arr).all()
+    # rows are substochastic: eq. 5's delta form stays a convex update
+    assert (intra_val.sum(axis=-1) <= 1.0 + 1e-5).all()
+    assert (np.asarray(h.inter.val).sum(axis=-1) <= 1.0 + 1e-5).all()
+    # every positive intra edge stays inside the sender's cluster
+    for t in range(cluster.shape[0]):
+        src = np.broadcast_to(np.arange(k)[:, None], intra_idx[t].shape)
+        live = intra_val[t] > 0
+        assert (cluster[t][intra_idx[t][live]]
+                == cluster[t][src[live]]).all()
+        # one shared gamma per cluster, positive, never above the cap
+        for lab in np.unique(cluster[t]):
+            g = gnode[t][cluster[t] == lab]
+            assert np.allclose(g, g[0])
+        assert (gnode[t] > 0).all() and (gnode[t] <= 0.5 + 1e-6).all()
+        # non-leader inter rows are exactly zero (pure self-update)
+        led = np.unique(np.asarray(geo[1])[t])
+        non_leader = np.setdiff1d(np.arange(k), led)
+        assert (inter_val[t][non_leader] == 0).all()
+    # fault masks drain both tiers; surviving rows keep their mass
+    crashed = rng.random(k) < 0.3
+    mask = np.outer(~crashed, ~crashed).astype(np.float32)
+    hm = hier.masked_hier_stack(h, jnp.asarray(
+        np.broadcast_to(mask, (cluster.shape[0], k, k))))
+    mi = np.asarray(hm.intra.val)
+    assert np.isfinite(mi).all()
+    assert (mi[:, crashed] == 0).all()
+    alive_iso = ~crashed
+    np.testing.assert_allclose(
+        mi[:, alive_iso].sum(axis=-1)
+        [np.asarray((intra_val * ~crashed[intra_idx])[:, alive_iso]
+                    .sum(axis=-1) > 0)],
+        intra_val[:, alive_iso].sum(axis=-1)
+        [np.asarray((intra_val * ~crashed[intra_idx])[:, alive_iso]
+                    .sum(axis=-1) > 0)], atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(3, 14), st.integers(2, 6),
+           st.sampled_from(["cnd", "uniform", "metropolis", "datasize"]))
+    def test_hier_stacks_well_formed(seed, k, max_size, rule):
+        _check_hier_stacks(np.random.default_rng(seed), k, max_size, rule)
+
+else:  # pragma: no cover - exercised only without hypothesis
+    def test_hier_stacks_well_formed():
+        rng = np.random.default_rng(0)
+        rules = ["cnd", "uniform", "metropolis", "datasize"]
+        for i in range(25):
+            k = int(rng.integers(3, 15))
+            _check_hier_stacks(rng, k, int(rng.integers(2, 7)),
+                               rules[i % len(rules)])
+
+
+def test_constant_hier_stacks_broadcast():
+    adj = np.asarray(topology.adjacency("full", 6))
+    h, gamma = hier.hier_static_stacks(
+        jnp.asarray(adj), rule="uniform", ratios=jnp.ones(6),
+        sizes=jnp.full((6,), 160.0), gamma_cap=0.4, max_cluster_size=3,
+        leader_policy="degree", inter_degree=2)
+    stack, gammas = hier.constant_hier_stacks(h, gamma, 5)
+    assert stack.cluster.shape == (5, 6)
+    assert stack.intra.idx.shape[:2] == (5, 6)
+    assert stack.burst.shape == (5,)
+    assert gammas.shape == (5,)
+    np.testing.assert_array_equal(np.asarray(stack.gamma_node[3]),
+                                  np.asarray(h.gamma_node))
+    np.testing.assert_allclose(np.asarray(hier.hier_gamma_stack(stack, 0.4)),
+                               np.asarray(gammas), atol=1e-6)
+
+
+# --- the gamma decoupling (the point of the hierarchy) -----------------------
+
+def test_cluster_gamma_beats_global_bound_at_city_scale():
+    """K=256 Manhattan: the global stable_gamma pays for the densest
+    intersection; every cluster-local gamma is strictly better."""
+    k, rounds = 256, 2
+    mob = MobilityConfig(kind="manhattan", radio_range=500.0, speed=10.0,
+                         seed=0)
+    h, _ = hier.hier_scenario_stacks(
+        mob, rounds, k, rule="metropolis", gamma_cap=2.0,
+        ratios=jnp.ones(k), sizes=jnp.full((k,), 160.0),
+        max_cluster_size=16, leader_policy="degree", inter_degree=4)
+    adj = adjacency_stack(mob, rounds, k)
+    global_gamma = np.asarray(
+        gamma_stack(eta_stack(adj, "metropolis"), 2.0))
+    gnode = np.asarray(h.gamma_node)
+    assert np.isfinite(gnode).all()
+    for t in range(rounds):
+        assert gnode[t].min() > global_gamma[t]
+    # and the fleet actually partitioned into many capped clusters
+    assert len(np.unique(np.asarray(h.cluster)[0])) >= k // 16
+
+
+# --- device mix: kernel / XLA / oracle ---------------------------------------
+
+def _random_intra(rng, k, d):
+    idx = np.stack([rng.choice([j for j in range(k) if j != i], size=d,
+                               replace=False) for i in range(k)])
+    val = rng.uniform(0.0, 1.0 / d, size=(k, d)).astype(np.float32)
+    val[rng.random(k) < 0.2] = 0.0              # isolated rows
+    return idx.astype(np.int32), val
+
+
+def test_cluster_mix_flat_matches_oracle():
+    rng = np.random.default_rng(1)
+    k, d, p = 7, 3, 128
+    idx, val = _random_intra(rng, k, d)
+    buf = rng.standard_normal((k, p)).astype(np.float32)
+    g = rng.uniform(0.1, 0.9, size=k).astype(np.float32)
+    got = np.asarray(flatten.cluster_mix_flat(
+        jnp.asarray(buf), jnp.asarray(idx), jnp.asarray(val),
+        jnp.asarray(g), use_kernel=False))
+    want = ref.cluster_mix(idx, val, buf, buf, buf, g)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # drained rows are exact self-updates regardless of gamma
+    iso = val.sum(axis=1) == 0
+    if iso.any():
+        np.testing.assert_array_equal(got[iso], buf[iso])
+
+
+def test_cluster_mix_kernel_interpret_matches_oracle():
+    rng = np.random.default_rng(2)
+    k, d, p = 8, 3, 256                          # p % 128 == 0 (kernel gate)
+    idx, val = _random_intra(rng, k, d)
+    buf = rng.standard_normal((k, p)).astype(np.float32)
+    wire = rng.standard_normal((k, p)).astype(np.float32)
+    g = rng.uniform(0.1, 0.9, size=k).astype(np.float32)
+    got = np.asarray(ops.cluster_mix(
+        jnp.asarray(idx), jnp.asarray(val), jnp.asarray(buf),
+        jnp.asarray(buf), jnp.asarray(wire), jnp.asarray(g),
+        force_kernel=True))
+    want = ref.cluster_mix(idx, val, buf, buf, wire, g)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_hier_mix_burst_runs_extra_intra_passes():
+    rng = np.random.default_rng(3)
+    k, p = 6, 128
+    adj = np.asarray(topology.adjacency("full", k))
+    h, gamma = hier.hier_static_stacks(
+        jnp.asarray(adj), rule="uniform", ratios=jnp.ones(k),
+        sizes=jnp.full((k,), 160.0), gamma_cap=0.4, max_cluster_size=8,
+        leader_policy="degree", inter_degree=2)
+    buf = jnp.asarray(rng.standard_normal((k, p)).astype(np.float32))
+    quiet = hier.hier_mix_flat(buf, h, gamma, burst_passes=2)
+    flagged = h._replace(burst=jnp.ones((), jnp.float32))
+    burst = hier.hier_mix_flat(buf, flagged, gamma, burst_passes=2)
+    # the burst round contracts disagreement strictly further
+    spread = lambda b: float(jnp.abs(b - b.mean(axis=0)).max())
+    assert spread(burst) < spread(quiet) < spread(buf)
+    # burst_passes=0 ignores the flag entirely (bit-exact)
+    np.testing.assert_array_equal(
+        np.asarray(hier.hier_mix_flat(buf, flagged, gamma, burst_passes=0)),
+        np.asarray(hier.hier_mix_flat(buf, h, gamma, burst_passes=0)))
+
+
+def test_wire_guard_drains_poisoned_leader_from_both_tiers():
+    k = 6
+    adj = np.asarray(topology.adjacency("full", k))
+    h, _ = hier.hier_static_stacks(
+        jnp.asarray(adj), rule="uniform", ratios=jnp.ones(k),
+        sizes=jnp.full((k,), 160.0), gamma_cap=0.4, max_cluster_size=3,
+        leader_policy="degree", inter_degree=2)
+    leader = int(np.unique(np.asarray(
+        h.inter.idx)[np.asarray(h.inter.val) > 0])[0])
+    buf = jnp.ones((k, 8), jnp.float32)
+    sent = buf.at[leader].set(jnp.nan)
+    sent_clean, used, quarantined = fault_models.wire_guard(sent, buf, h)
+    assert float(quarantined[leader]) == 1.0
+    assert np.isfinite(np.asarray(sent_clean)).all()
+    # the poisoned node vanishes from co-members' intra rows AND from
+    # every leader's inter row; surviving rows keep their mass
+    for tier in (used.intra, used.inter):
+        v, i = np.asarray(tier.val), np.asarray(tier.idx)
+        assert (v[i == leader] == 0).all()
+    np.testing.assert_allclose(np.asarray(used.intra.val.sum(axis=1)),
+                               np.asarray(h.intra.val.sum(axis=1)),
+                               atol=1e-5)
+
+
+# --- end-to-end training ------------------------------------------------------
+
+def _mini_problem(k=6, n=48):
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(k, n, 4)).astype(np.float32)
+    w = rng.normal(size=(4,)).astype(np.float32)
+    y = (x @ w).astype(np.float32)
+    items = np.arange(k * 16 * 2).reshape(k, 16, 2) % 53
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    def init_params(rng_):
+        return {"w": jax.random.normal(rng_, (4,)) * 0.1}
+
+    return loss_fn, init_params, {"x": x, "y": y}, jnp.asarray(items)
+
+
+def _final_params(fed, rounds=3, rng=None, **kw):
+    loss_fn, init_params, data, items = _mini_problem(fed.num_nodes)
+    tr = cdfl.build_trainer(loss_fn, fed,
+                            TrainConfig(batch_size=8, learning_rate=1e-2,
+                                        seed=0), **kw)
+    st_ = tr.init(jax.random.PRNGKey(0), init_params, items)
+    run_kw = {} if rng is None else {"rng": rng}
+    final, metrics = tr.run_rounds(st_, data, rounds, **run_kw)
+    return np.asarray(final.params["w"]), metrics
+
+
+@pytest.mark.parametrize("algorithm", ["cdfl", "dpsgd"])
+def test_single_cluster_matches_flat_dense(algorithm):
+    # one cluster covering the whole fleet: the intra tier IS the dense
+    # mix (every co-member link kept, cluster gamma == global gamma),
+    # the inter tier has a single all-zero-neighbor leader row
+    fed = FedConfig(num_nodes=6, topology="full", algorithm=algorithm,
+                    local_steps=2)
+    w_dense, _ = _final_params(fed)
+    w_hier, mh = _final_params(dataclasses.replace(
+        fed, mixing_format="hierarchical",
+        hierarchy=HierarchyConfig(max_cluster_size=8)))
+    np.testing.assert_allclose(w_hier, w_dense, atol=1e-5)
+    assert np.isfinite(np.asarray(mh["loss"])).all()
+    if algorithm == "cdfl":
+        assert float(np.asarray(mh["clusters"]).max()) == 1.0
+
+
+def test_hier_run_with_crash_faults_stays_finite():
+    fed = FedConfig(
+        num_nodes=6, topology="full", algorithm="cdfl", local_steps=2,
+        mobility=MobilityConfig(kind="platoon", radio_range=120.0, seed=2),
+        faults=FaultConfig(kinds=("crash",), crash_rate=0.3,
+                           recover_rate=0.5, seed=4),
+        mixing_format="hierarchical",
+        hierarchy=HierarchyConfig(max_cluster_size=3))
+    w, metrics = _final_params(fed, rounds=4)
+    assert np.isfinite(w).all()
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    assert metrics["health"].shape == (4, 6)
+    assert metrics["gamma_intra"].shape == (4,)
+    assert (np.asarray(metrics["clusters"]) >= 1).all()
+
+
+def test_hierarchical_config_validation():
+    with pytest.raises(ValueError, match="transport"):
+        FedConfig(num_nodes=4, mixing_format="hierarchical",
+                  transport="ring")
+    with pytest.raises(ValueError, match="robust"):
+        FedConfig(num_nodes=4, mixing_format="hierarchical",
+                  robust="median")
+    with pytest.raises(ValueError):
+        FedConfig(num_nodes=4, mixing_format="hierarchical",
+                  algorithm="fedavg")
+    with pytest.raises(ValueError, match="hierarchical"):
+        FedConfig(num_nodes=4, hierarchy=HierarchyConfig())
+    for kw in (dict(max_cluster_size=1), dict(inter_degree=0),
+               dict(leader_policy="nope"), dict(remerge_burst=-1),
+               dict(intra_rule="nope")):
+        with pytest.raises(ValueError):
+            HierarchyConfig(**kw)
+
+
+# --- ingest drift detection ---------------------------------------------------
+
+def test_drift_novelty_flags_regime_change_on_decayed_sketch():
+    cfg = IngestConfig(scenario="duplicate_heavy", cm_hashes=4,
+                       cm_width=1024, decay=0.5, drift_threshold=0.5)
+    rng = np.random.default_rng(0)
+    ids_a = rng.choice(1 << 20, size=64, replace=False).astype(np.int32)
+    ids_b = rng.choice(1 << 20, size=64, replace=False).astype(np.int32)
+    sh_a = sketches.slot_hashes(jnp.asarray(ids_a[None]), cfg)
+    state = sketches.init_state(1, cfg)
+    idx = jnp.arange(64, dtype=jnp.int32).reshape(1, 1, 64)
+    for _ in range(3):
+        state = sketches.update(state, sh_a, idx, decay=cfg.decay)
+    # same regime: every sampled slot is well-known -> novelty ~ 0
+    mult_a = sketches.multiplicity(state.cm, sh_a.buckets)
+    nov_a = weighting.drift_novelty(mult_a, idx[:, 0])
+    assert float(nov_a[0]) < 0.1
+    # regime change: a fresh id set reads near-zero counts -> novelty ~ 1
+    sh_b = sketches.slot_hashes(jnp.asarray(ids_b[None]), cfg)
+    mult_b = sketches.multiplicity(state.cm, sh_b.buckets)
+    nov_b = weighting.drift_novelty(mult_b, idx[:, 0])
+    assert float(nov_b[0]) > cfg.drift_threshold
+
+
+@pytest.mark.parametrize("eta_kind", ["dense", "sparse", "hier"])
+def test_scale_eta_columns_mass_preserving_and_passthrough(eta_kind):
+    k = 6
+    adj = np.asarray(topology.adjacency("full", k))
+    dense = topology.mixing_weights(jnp.asarray(adj), "metropolis")
+    if eta_kind == "dense":
+        eta = dense
+        val_of = lambda e: np.asarray(e)
+        mass = lambda e: np.asarray(e.sum(axis=1))
+    elif eta_kind == "sparse":
+        eta = topology.sparsify_eta(dense, 3)
+        val_of = lambda e: np.asarray(e.val)
+        mass = lambda e: np.asarray(e.val.sum(axis=1))
+    else:
+        eta, _ = hier.hier_static_stacks(
+            jnp.asarray(adj), rule="metropolis", ratios=jnp.ones(k),
+            sizes=jnp.full((k,), 160.0), gamma_cap=0.4,
+            max_cluster_size=3, leader_policy="degree", inter_degree=2)
+        val_of = lambda e: np.asarray(e.intra.val)
+        mass = lambda e: np.asarray(e.intra.val.sum(axis=1))
+    # no discount anywhere: bit-exact pass-through
+    out = weighting.scale_eta_columns(eta, jnp.ones(k))
+    np.testing.assert_array_equal(val_of(out), val_of(eta))
+    # node 2 discounted: its columns shrink, every row keeps its mass
+    scale = jnp.ones(k).at[2].set(0.25)
+    out = weighting.scale_eta_columns(eta, scale)
+    np.testing.assert_allclose(mass(out), mass(eta), atol=1e-6)
+    # "reset": the column vanishes entirely, rows renormalize
+    out0 = weighting.scale_eta_columns(eta, jnp.ones(k).at[2].set(0.0))
+    if eta_kind == "dense":
+        assert (np.asarray(out0)[:, 2] == 0).all()
+    else:
+        tier = out0.intra if eta_kind == "hier" else out0
+        assert (np.asarray(tier.val)[np.asarray(tier.idx) == 2] == 0).all()
+    np.testing.assert_allclose(mass(out0), mass(eta), atol=1e-6)
+
+
+def test_drift_never_triggering_is_bit_exact_with_drift_off():
+    base = IngestConfig(scenario="duplicate_heavy", decay=0.9)
+    fed = FedConfig(num_nodes=4, topology="full", local_steps=2,
+                    ingest=base)
+    armed = dataclasses.replace(
+        fed, ingest=dataclasses.replace(base, drift_threshold=1.0))
+    w_off, m_off = _final_params(fed, rounds=4, rng=jax.random.PRNGKey(7))
+    w_on, m_on = _final_params(armed, rounds=4, rng=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(w_on, w_off)
+    assert "drift" not in m_off
+    drift = np.asarray(m_on["drift"])
+    assert drift.shape == (4, 4) and np.isfinite(drift).all()
+    # novelty is a fraction, and the threshold=1.0 guard never trips
+    assert (drift >= 0).all() and (drift <= 1).all()
