@@ -15,6 +15,9 @@ import re
 import sys
 
 REQUIRED_KEYS = {"name": str, "us_per_call": (int, float), "derived": str}
+# keys a row MAY carry (typed when present); "repeats" records how many
+# timed repeats the us_per_call median was taken over
+OPTIONAL_KEYS = {"repeats": int}
 
 # one representative per row family run.py must keep emitting; matched
 # as a prefix so parameterized names (round counts) may vary
@@ -35,6 +38,7 @@ REQUIRED_FAMILIES = (
     "sketch_",              # streaming-sketch update throughput rows
     "ingest_",              # ingest-on vs off scan-overhead rows
     "hier_",                # two-tier hierarchical mix + stack rows
+    "sweep_",               # batched fleet sweep vs per-variant loop rows
 )
 
 
@@ -59,7 +63,11 @@ def check(path: str) -> list[str]:
             elif not isinstance(row[key], typ):
                 errors.append(f"row {i} ({row.get('name', '?')}): "
                               f"{key}={row[key]!r} is not {typ}")
-        extra = set(row) - set(REQUIRED_KEYS)
+        for key, typ in OPTIONAL_KEYS.items():
+            if key in row and not isinstance(row[key], typ):
+                errors.append(f"row {i} ({row.get('name', '?')}): "
+                              f"{key}={row[key]!r} is not {typ}")
+        extra = set(row) - set(REQUIRED_KEYS) - set(OPTIONAL_KEYS)
         if extra:
             errors.append(f"row {i} ({row.get('name', '?')}): "
                           f"unexpected keys {sorted(extra)}")
@@ -77,6 +85,7 @@ def check(path: str) -> list[str]:
             errors.append(f"no row in family {fam!r}*")
     errors += _check_sparse_beats_dense(rows)
     errors += _check_hier_beats_dense(rows)
+    errors += _check_sweep_beats_loop(rows)
     return errors
 
 
@@ -127,6 +136,37 @@ def _check_hier_beats_dense(rows) -> list[str]:
         return [f"hier_mix_k1024 ({us_h:.0f} us) not faster than "
                 f"hier_dense_ref_k1024 ({us_d:.0f} us) — the two-tier "
                 f"mix lost its advantage over the flat dense matmul"]
+    return []
+
+
+def _check_sweep_beats_loop(rows) -> list[str]:
+    """Batched fleet execution is a perf feature: the single vmapped
+    scan over V variants must beat the Python loop of V single-run
+    scans on the SAME workload. At V>=32 (the full-suite shape, where
+    XLA:CPU thunk amortization has room to pay off) the ISSUE
+    acceptance bar is >=5x; at smaller V (the --quick CI shape) we only
+    require batched < loop — the amortizable overhead is V-fold smaller
+    and CI boxes are noisy."""
+    by_name = {r.get("name"): r for r in rows if isinstance(r, dict)}
+    for name, row in by_name.items():
+        m = re.fullmatch(r"sweep_batched_v(\d+)_r(\d+)", str(name))
+        if not m:
+            continue
+        v, r_ = m.group(1), m.group(2)
+        loop = by_name.get(f"sweep_loop_v{v}_r{r_}")
+        if not loop:
+            return [f"{name} has no matching sweep_loop_v{v}_r{r_} row"]
+        us_b = row.get("us_per_call")
+        us_l = loop.get("us_per_call")
+        if not isinstance(us_b, (int, float)) or \
+                not isinstance(us_l, (int, float)):
+            return []                         # typed errors reported above
+        need = 5.0 if int(v) >= 32 else 1.0
+        if us_l < us_b * need:
+            return [f"sweep_batched_v{v}_r{r_} ({us_b:.0f} us) not "
+                    f"{need:.0f}x faster than sweep_loop_v{v}_r{r_} "
+                    f"({us_l:.0f} us) — the vmapped whole-run scan "
+                    f"lost its amortization win over the Python loop"]
     return []
 
 

@@ -13,13 +13,32 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class _Us(float):
+    """A microseconds measurement that remembers how many timed repeats
+    its median was taken over. ``run.py`` records the count as the
+    ``repeats`` JSON key, so the ``check_schema --baseline`` regression
+    guard knows each row is a median (PR 5/6 emits were single-pass
+    means and drifted ~10% between idle runs on the same box)."""
+
+    reps = 1
+
+    def __new__(cls, value, reps: int = 1):
+        out = super().__new__(cls, value)
+        out.reps = int(reps)
+        return out
+
+
 def _time(fn, *args, iters=5, warmup=2):
+    """Median of ``iters`` individually timed calls after ``warmup``
+    untimed ones (compile + cache effects land in the warmup)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
-        out = jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return _Us(statistics.median(ts) * 1e6, iters)  # us
 
 
 def _median_time(fn, *args, reps=7, warmup=2):
@@ -31,7 +50,7 @@ def _median_time(fn, *args, reps=7, warmup=2):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return statistics.median(ts) * 1e6  # us
+    return _Us(statistics.median(ts) * 1e6, reps)  # us
 
 
 def bench_sketch():
@@ -440,8 +459,8 @@ def bench_scan_rounds(quick: bool = False):
         t0 = time.perf_counter()
         jax.block_until_ready(run_scan())
         t_scan.append(time.perf_counter() - t0)
-    us_loop = statistics.median(t_loop) * 1e6
-    us_scan = statistics.median(t_scan) * 1e6
+    us_loop = _Us(statistics.median(t_loop) * 1e6, reps)
+    us_scan = _Us(statistics.median(t_scan) * 1e6, reps)
     samples = 4 * 10 * 32 * rounds
     return [
         {"name": f"cdfl_{rounds}rounds_loop_perleaf_seed",
@@ -501,7 +520,7 @@ def bench_scan_rounds_xf(quick: bool = False):
         t0 = time.perf_counter()
         jax.block_until_ready(run())
         ts.append(time.perf_counter() - t0)
-    us = statistics.median(ts) * 1e6
+    us = _Us(statistics.median(ts) * 1e6, reps)
     return [{"name": f"cdfl_{rounds}rounds_scan_flat_xf",
              "us_per_call": us,
              "derived": f"{us / rounds:.0f} us/round; 74-leaf tree, "
@@ -775,3 +794,88 @@ def bench_hierarchy(quick: bool = False):
                             f"stacks, full horizon ({us_b / r_stack:.0f} "
                             f"us/round compile cost)"})
     return rows
+
+
+def bench_sweep(quick: bool = False):
+    """Batched fleet execution: a mobility_sweep-shaped workload — V
+    variant runs (seed axis) of a small-MLP platoon fleet — through ONE
+    vmapped ``run_batch`` scan vs the per-variant Python loop of
+    single-run Session scans (what paper_tables paid before). Same
+    trainer, same compiled caches, interleaved timing; both paths get
+    their sessions pre-compiled (the batched state stack is part of
+    ``compile_batch``, like ``compile`` owns init). The win is XLA:CPU
+    thunk amortization: tiny per-round ops are dispatch-bound, and the
+    (V,)-mapped program runs the SAME thunk count over V-fold payloads —
+    plus the loop's per-run host work (mixing-stack kinematics, scan
+    dispatch) collapsing to one."""
+    from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
+    from repro.experiment import Experiment, SweepAxes
+
+    v = 8 if quick else 32
+    rounds = 10 if quick else 30
+    reps = 2 if quick else 3
+    k = 4
+
+    # dispatch-bound payload ON PURPOSE: per-round device compute must
+    # be small so the row measures the fixed per-thunk overhead that
+    # batching amortizes (a compute-bound model hides it — the paper-MLP
+    # shape runs both paths at matmul speed and shows ~1x)
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"][:, None]) ** 2)
+
+    def init_params(r):
+        return {"w": jax.random.normal(r, (16, 1)) * 0.1}
+
+    rng = np.random.default_rng(0)
+    data = {"x": jnp.asarray(rng.normal(size=(k, 64, 16)), jnp.float32),
+            "y": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32)}
+    node_items = jnp.asarray(rng.integers(0, 40, (k, 64, 4)))
+    exp = Experiment.from_parts(
+        loss_fn, init_params,
+        fed=FedConfig(num_nodes=k, local_steps=2,
+                      mobility=MobilityConfig(kind="platoon",
+                                              speed_jitter=0.15)),
+        train=TrainConfig(learning_rate=1e-2, batch_size=8))
+    axes = SweepAxes(seeds=v)
+
+    # both scans donate their state: pre-compile one session (set) per
+    # timed call + one warmup, sharing the Experiment's jit caches
+    batch_sessions = [exp.compile_batch(data, node_items, axes)
+                      for _ in range(1 + reps)]
+    loop_sessions = [
+        [exp.compile(data, node_items, rng=jax.random.PRNGKey(s),
+                     sample_rng=jax.random.PRNGKey(s + 1))
+         for s in range(v)]
+        for _ in range(1 + reps)]
+
+    def run_batched():
+        res = batch_sessions.pop().run_batch(rounds)
+        return jax.tree.leaves(res.state.params)[0]
+
+    def run_loop():
+        out = [s.run(rounds) for s in loop_sessions.pop()]
+        return jax.tree.leaves(out[-1].state.params)[0]
+
+    jax.block_until_ready(run_batched())
+    jax.block_until_ready(run_loop())
+    t_batch, t_loop = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_loop())
+        t_loop.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_batched())
+        t_batch.append(time.perf_counter() - t0)
+    us_loop = _Us(statistics.median(t_loop) * 1e6, reps)
+    us_batch = _Us(statistics.median(t_batch) * 1e6, reps)
+    return [
+        {"name": f"sweep_loop_v{v}_r{rounds}",
+         "us_per_call": us_loop,
+         "derived": f"{us_loop / v:.0f} us/variant; {v} single-run "
+                    f"Session scans in a Python loop"},
+        {"name": f"sweep_batched_v{v}_r{rounds}",
+         "us_per_call": us_batch,
+         "derived": f"{us_batch / v:.0f} us/variant; one vmapped scan, "
+                    f"{us_loop / us_batch:.2f}x faster than the "
+                    f"per-variant loop"},
+    ]

@@ -19,7 +19,7 @@ from repro import mobility
 from repro.configs.base import FedConfig, MobilityConfig, TrainConfig
 from repro.configs.paper_models import MLP_CONFIG, VGG_CONFIG
 from repro.data import pipeline, redundancy, synthetic
-from repro.experiment import EvalCallback, Experiment
+from repro.experiment import EvalCallback, Experiment, SweepAxes
 from repro.models import simple
 
 ALGS = ["cdfl", "cfa", "cdfa_m", "dpsgd"]
@@ -55,16 +55,11 @@ def _pad_cycle(a: np.ndarray, n: int) -> np.ndarray:
     return np.concatenate([a] * reps)[:n]
 
 
-def _run_to_target(model: str, alg: str, target: float = 0.8,
-                   max_rounds: int = 60, noise_scale: float = 1.0,
-                   mob: MobilityConfig | None = None):
-    """Returns (rounds_to_target_per_node, final_acc_per_node, curve).
-
-    All ``max_rounds`` rounds run device-resident under ONE
-    ``Session.run`` scan with a per-round :class:`EvalCallback` metric —
-    no per-round jit dispatch, host batching, or metrics sync (the seed
-    host loop paid all three every round); rounds-to-target is read off
-    the stacked accuracy array afterwards."""
+def _alg_setup(model: str, alg: str):
+    """Per-(model, algorithm) workload shared by the single-run and the
+    batched sweep drivers: loss/init/eval fns, the paper train config,
+    and the resident node-stacked arrays (CND-dedup'd for C-DFL, ragged
+    nodes padded with sampling restricted to each true count)."""
     if model == "mlp":
         cfgm = MLP_CONFIG
         nodes = _mlp_nodes()
@@ -98,8 +93,6 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
     def eval_fn(p):
         return simple.accuracy(fwd(p, xt), yt)
 
-    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg,
-                    mobility=mob)
     train = TrainConfig(learning_rate=lr, batch_size=cfgm.batch_size,
                         beta1=cfgm.beta1, beta2=cfgm.beta2, eps=cfgm.eps)
     raw_items = pipeline.FederatedBatcher(nodes, cfgm.batch_size,
@@ -113,6 +106,24 @@ def _run_to_target(model: str, alg: str, target: float = 0.8,
             "y": jnp.asarray(np.stack(
                 [_pad_cycle(d.y, n_max) for d in train_nodes]))}
     n_items = None if (n_per == n_max).all() else jnp.asarray(n_per)
+    return (loss, init_fn, eval_fn, train, local_steps, raw_items, data,
+            n_items)
+
+
+def _run_to_target(model: str, alg: str, target: float = 0.8,
+                   max_rounds: int = 60,
+                   mob: MobilityConfig | None = None):
+    """Returns (rounds_to_target_per_node, final_acc_per_node, curve).
+
+    All ``max_rounds`` rounds run device-resident under ONE
+    ``Session.run`` scan with a per-round :class:`EvalCallback` metric —
+    no per-round jit dispatch, host batching, or metrics sync (the seed
+    host loop paid all three every round); rounds-to-target is read off
+    the stacked accuracy array afterwards."""
+    (loss, init_fn, eval_fn, train, local_steps, raw_items, data,
+     n_items) = _alg_setup(model, alg)
+    fed = FedConfig(num_nodes=4, local_steps=local_steps, algorithm=alg,
+                    mobility=mob)
     session = Experiment.from_parts(
         lambda p, b: loss(p, b), init_fn, fed=fed, train=train,
     ).compile(data, raw_items, rng=jax.random.PRNGKey(0),
@@ -179,21 +190,50 @@ def mobility_sweep(model: str = "mlp", max_rounds: int = 60,
     One row per (scenario, algorithm): the static-ring rows reproduce
     the paper's Tables 1-4 ranking (C-DFL beats CFA under redundancy);
     the churned rows show how much of that gap mobility erodes.
+
+    All scenarios for one algorithm run as ONE batched vmapped scan
+    (``Experiment.compile_batch`` over the mobility axis): one trace,
+    one device program, and one metrics sync per algorithm instead of
+    one full ``Session.run`` per (scenario, algorithm) — numerically
+    identical to the loop (tests/test_batch.py pins batched == looped).
+    ``wall_s`` is therefore the whole-sweep wall time for that
+    algorithm, repeated on each of its rows.
     """
-    rows = []
-    for scen, mob in MOBILITY_SCENARIOS.items():
+    scens = list(MOBILITY_SCENARIOS)
+    stats_by_scen = {}
+    for scen in scens:
+        mob = MOBILITY_SCENARIOS[scen]
         if mob is None:
-            churn, stats = 0.0, None
+            stats_by_scen[scen] = (0.0, None)
         else:
             stats = mobility.handover_stats(
                 mobility.adjacency_stack(mob, max_rounds, 4))
-            churn = stats["churn_rate"]
-        for alg in algs:
-            t0 = time.time()
-            reached, accs, _ = _run_to_target(model, alg, target=target,
-                                              max_rounds=max_rounds,
-                                              mob=mob)
-            rr = [int(r) if r > 0 else max_rounds for r in reached]
+            stats_by_scen[scen] = (stats["churn_rate"], stats)
+
+    rows = []
+    for alg in algs:
+        t0 = time.time()
+        (loss, init_fn, eval_fn, train, local_steps, raw_items, data,
+         n_items) = _alg_setup(model, alg)
+        fed = FedConfig(num_nodes=4, local_steps=local_steps,
+                        algorithm=alg)
+        bs = Experiment.from_parts(
+            lambda p, b: loss(p, b), init_fn, fed=fed, train=train,
+        ).compile_batch(data, raw_items,
+                        SweepAxes(mobility=[MOBILITY_SCENARIOS[s]
+                                            for s in scens]),
+                        rng=jax.random.PRNGKey(0),
+                        sample_rng=jax.random.PRNGKey(0),
+                        n_items=n_items)
+        res = bs.run_batch(max_rounds, callbacks=[EvalCallback(eval_fn)])
+        acc = np.asarray(res.metrics["eval"])            # (V, R, K)
+        hit = acc >= target
+        reached = np.where(hit.any(axis=1),
+                           hit.argmax(axis=1) + 1, -1)   # (V, K)
+        wall = round(time.time() - t0, 1)
+        for i, scen in enumerate(scens):
+            churn, stats = stats_by_scen[scen]
+            rr = [int(r) if r > 0 else max_rounds for r in reached[i]]
             rows.append({
                 "table": f"mobility_{model}",
                 "scenario": scen,
@@ -203,8 +243,8 @@ def mobility_sweep(model: str = "mlp", max_rounds: int = 60,
                 else stats["partitioned_rounds"],
                 "rounds_to_80": rr,
                 "mean_rounds_to_80": round(float(np.mean(rr)), 1),
-                "final_acc": round(float(np.mean(accs)), 3),
-                "wall_s": round(time.time() - t0, 1),
+                "final_acc": round(float(np.mean(acc[i, -1])), 3),
+                "wall_s": wall,
             })
     return rows
 

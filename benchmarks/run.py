@@ -23,7 +23,7 @@ def main() -> None:
                     help="skip the paper tables (perf rows only)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write micro rows as JSON "
-                         "[{name, us_per_call, derived}, ...]")
+                         "[{name, us_per_call, repeats, derived}, ...]")
     args = ap.parse_args()
 
     from benchmarks import micro, paper_tables
@@ -42,6 +42,7 @@ def main() -> None:
                    (micro.bench_consensus_round, {}),
                    (micro.bench_scan_rounds, quick_kw),
                    (micro.bench_scan_rounds_xf, quick_kw),
+                   (micro.bench_sweep, quick_kw),
                    (micro.bench_mobility, quick_kw),
                    (micro.bench_faults, quick_kw),
                    (micro.bench_ingest, quick_kw),
@@ -56,6 +57,7 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump([{"name": r["name"],
                         "us_per_call": round(float(r["us_per_call"]), 1),
+                        "repeats": int(getattr(r["us_per_call"], "reps", 1)),
                         "derived": r["derived"]} for r in json_rows],
                       f, indent=1)
         print(f"# wrote {len(json_rows)} rows to {args.json}")

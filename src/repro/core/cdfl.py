@@ -68,7 +68,6 @@ so a link that dropped since the snapshot was taken contributes nothing.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
@@ -117,6 +116,10 @@ class Trainer(NamedTuple):
     # (mobility-derived when FedConfig.mobility is set, broadcast
     # static weights otherwise; sparse under mixing_format='sparse')
     mixing_stack: Callable = None
+    # batched fleet driver: V whole runs — (V,)-stacked FedState, shared
+    # data, per-variant rng/eta/gamma/lr — under ONE vmapped scan (see
+    # run_rounds_batch in build_trainer); None only on hand-built stubs
+    run_rounds_batch: Callable = None
 
 
 def _node_sketches(node_items, fed: FedConfig):
@@ -324,7 +327,12 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return FedState(params, opt_state, ratios, sizes,
                         jnp.zeros((), jnp.int32), tstate, fstate, istate)
 
-    def _flat_local_step(vec, ost, batch, layout):
+    # ``lr=None`` throughout the step machinery keeps the TrainConfig
+    # rate baked in at trace time (the single-run path — bit-identical
+    # to previous builds); a traced scalar overrides it at runtime so
+    # the batched driver can vmap V learning rates through ONE program.
+
+    def _flat_local_step(vec, ost, batch, layout, lr=None):
         """One local Adam step with params resident in the flat (P,)
         vector: the forward/backward reads pytree slice VIEWS of the
         buffer, the gradient pytree is flattened ONCE, and the fused
@@ -332,13 +340,13 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         p = flatten.unflatten_one(vec, layout)
         loss, grads = jax.value_and_grad(loss_fn)(p, batch)
         gvec = flatten.pack_node(grads, layout)
-        vec, ost = fopt.update(gvec, ost, vec)
+        vec, ost = fopt.update(gvec, ost, vec, lr=lr)
         return vec, ost, loss
 
-    def _leaf_local_step(p, o, batch):
+    def _leaf_local_step(p, o, batch, lr=None):
         """One leaf-space local Adam step (pytree params/moments)."""
         loss, grads = jax.value_and_grad(loss_fn)(p, batch)
-        p, o = opt.update(grads, o, p)
+        p, o = opt.update(grads, o, p, lr=lr)
         return p, o, loss
 
     # ONE loop scaffold serves both representations and both batch
@@ -376,9 +384,10 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             lambda v, o, b: _flat_local_step(v, o, b, layout),
             buf, opt_state, batches)
 
-    def flat_local_updates_from_idx(buf, opt_state, layout, data, idx):
+    def flat_local_updates_from_idx(buf, opt_state, layout, data, idx,
+                                    lr=None):
         return _run_local_steps_from_idx(
-            lambda v, o, b: _flat_local_step(v, o, b, layout),
+            lambda v, o, b: _flat_local_step(v, o, b, layout, lr=lr),
             buf, opt_state, data, idx)
 
     # -- leaf-space local steps (the CPU lowering of the same pipeline) --
@@ -403,9 +412,11 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return _run_local_steps(_leaf_local_step, params, opt_state,
                                 batches)
 
-    def leaf_local_updates_from_idx(params, opt_state, data, idx):
-        return _run_local_steps_from_idx(_leaf_local_step, params,
-                                         opt_state, data, idx)
+    def leaf_local_updates_from_idx(params, opt_state, data, idx,
+                                    lr=None):
+        return _run_local_steps_from_idx(
+            lambda p, o, b: _leaf_local_step(p, o, b, lr=lr),
+            params, opt_state, data, idx)
 
     # -- dpsgd (Lian et al. 17): gossip-average every SGD step ---------------
     # The per-step mix couples the nodes, so dpsgd cannot vmap a
@@ -437,20 +448,21 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                                       unroll=local_unroll)
         return p, o, losses.mean() * jnp.ones((fed.num_nodes,))
 
-    def _dpsgd_flat_step(buf, ost, batch, eta, gamma, layout):
+    def _dpsgd_flat_step(buf, ost, batch, eta, gamma, layout, lr=None):
         buf = _dpsgd_mix(buf, eta, gamma)
         buf, ost, losses = jax.vmap(
-            lambda v, o, b: _flat_local_step(v, o, b, layout)
+            lambda v, o, b: _flat_local_step(v, o, b, layout, lr=lr)
         )(buf, ost, batch)
         return buf, ost, losses.mean()
 
-    def _dpsgd_leaf_step(p, o, batch, eta, gamma):
+    def _dpsgd_leaf_step(p, o, batch, eta, gamma, lr=None):
         def mix_leaf(leaf):
             flat = leaf.reshape(leaf.shape[0], -1)
             return _dpsgd_mix(flat, eta, gamma).reshape(leaf.shape)
         p = jax.tree.map(mix_leaf, p)
         losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(p, batch)
-        p, o = jax.vmap(opt.update)(grads, o, p)
+        p, o = jax.vmap(lambda g, o_, p_: opt.update(g, o_, p_, lr=lr)
+                        )(grads, o, p)
         return p, o, losses.mean()
 
     # Both drivers below take and return ``opt_state`` in the ambient
@@ -472,7 +484,7 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         return flatten.flatten(p, layout)[0], o, loss
 
     def dpsgd_updates_from_idx(buf, opt_state, layout, eta, gamma,
-                               data, idx):
+                               data, idx, lr=None):
         """Scan-driver dpsgd round: each step gathers its minibatches
         on device from the resident datasets (idx: (K, S, B))."""
         def batch_of(i):  # i: (K, B) this step's per-node indices
@@ -482,11 +494,11 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         if flat_local:
             return _dpsgd_steps(
                 lambda v, o, i: _dpsgd_flat_step(v, o, batch_of(i), eta,
-                                                 gamma, layout),
+                                                 gamma, layout, lr=lr),
                 buf, opt_state, steps_idx)
         p, o, loss = _dpsgd_steps(
             lambda p, o, i: _dpsgd_leaf_step(p, o, batch_of(i), eta,
-                                             gamma),
+                                             gamma, lr=lr),
             flatten.unflatten(buf, layout), opt_state, steps_idx)
         return flatten.flatten(p, layout)[0], o, loss
 
@@ -596,20 +608,21 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                              state.istate)
         return new_state, metrics
 
-    def _mixing(state: FedState):
+    def _mixing(state: FedState, cap: Optional[float] = None):
+        cap = fed.gamma if cap is None else cap
         if hier_fmt:
             # the index geometry depends only on the concrete static
             # adjacency (a trace constant), so this is jit-traceable in
             # the CND ratios like the dense rule
             return hier_lib.hier_static_stacks(
                 adj, rule=hier_rule, ratios=state.ratios,
-                sizes=state.sizes, gamma_cap=fed.gamma,
+                sizes=state.sizes, gamma_cap=cap,
                 max_cluster_size=hier_cfg.max_cluster_size,
                 leader_policy=hier_cfg.leader_policy,
                 inter_degree=hier_cfg.inter_degree,
                 hysteresis=hier_cfg.hysteresis)
         eta = eta_fn(state)
-        gamma = topology.stable_gamma(eta, fed.gamma)
+        gamma = topology.stable_gamma(eta, cap)
         if sparse_fmt:
             # sparsify AFTER the stability bound: the top-D renorm
             # preserves row sums, so the bound computed on the dense
@@ -636,7 +649,9 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         eta, gamma = _mixing(state)
         return round_body(state, batches, eta, gamma)
 
-    def mixing_stack(state: FedState, num_rounds: int, start: int = 0):
+    def mixing_stack(state: FedState, num_rounds: int, start: int = 0,
+                     *, mobility="config",
+                     gamma_cap: Optional[float] = None):
         """Per-round mixing for the scan driver: ``(R, K, K)`` eta and
         ``(R,)`` gamma — or, under ``mixing_format='sparse'``, a
         ``topology.SparseEta`` with ``(R, K, D)`` stacks (built straight
@@ -646,10 +661,18 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         every round (ring transport: gated to the physical ring — links
         the transport cannot carry never appear). ``start`` offsets into
         the kinematic trace: a run resumed at round r continues the SAME
-        trajectory, so a segmented run equals an unsegmented one."""
+        trajectory, so a segmented run equals an unsegmented one.
+
+        ``mobility`` / ``gamma_cap`` override the config's own scenario
+        and step-size cap for THIS stack only — how batched sweeps build
+        per-variant stacks against one shared trainer (the sentinel
+        ``"config"`` keeps ``fed.mobility``; pass ``None`` to force the
+        static graph)."""
         from repro import mobility as mobility_lib
-        if not mobile:
-            eta, gamma = _mixing(state)
+        mob = fed.mobility if mobility == "config" else mobility
+        cap = fed.gamma if gamma_cap is None else float(gamma_cap)
+        if mob is None or mob.kind == "static":
+            eta, gamma = _mixing(state, cap)
             if hier_fmt:
                 return hier_lib.constant_hier_stacks(eta, gamma,
                                                      num_rounds)
@@ -659,8 +682,8 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
             return mobility_lib.constant_stacks(eta, gamma, num_rounds)
         if hier_fmt:
             return hier_lib.hier_scenario_stacks(
-                fed.mobility, num_rounds, fed.num_nodes, rule=hier_rule,
-                gamma_cap=fed.gamma, ratios=state.ratios,
+                mob, num_rounds, fed.num_nodes, rule=hier_rule,
+                gamma_cap=cap, ratios=state.ratios,
                 sizes=state.sizes,
                 max_cluster_size=hier_cfg.max_cluster_size,
                 leader_policy=hier_cfg.leader_policy,
@@ -669,15 +692,15 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
         if sparse_fmt:
             # ring+sparse is rejected at config validation, so no mask
             return mobility_lib.sparse_scenario_stacks(
-                fed.mobility, num_rounds, fed.num_nodes, rule=mix_rule,
-                gamma_cap=fed.gamma, degree=fed.degree,
+                mob, num_rounds, fed.num_nodes, rule=mix_rule,
+                gamma_cap=cap, degree=fed.degree,
                 ratios=state.ratios, sizes=state.sizes, start=start)
         mask = None
         if isinstance(transport, transport_lib.RingShardTransport):
             mask = topology.adjacency("ring", fed.num_nodes)
         return mobility_lib.scenario_stacks(
-            fed.mobility, num_rounds, fed.num_nodes, rule=mix_rule,
-            gamma_cap=fed.gamma, ratios=state.ratios, sizes=state.sizes,
+            mob, num_rounds, fed.num_nodes, rule=mix_rule,
+            gamma_cap=cap, ratios=state.ratios, sizes=state.sizes,
             mask=mask, start=start)
 
     def _freeze_rows(new, old, keep):
@@ -689,11 +712,9 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 n, o),
             new, old)
 
-    @partial(jax.jit, static_argnames=("num_rounds", "max_items"),
-             donate_argnums=(0,))
-    def _scan_rounds(state: FedState, data, round_keys: jax.Array,
-                     num_rounds: int, max_items: int, node_sizes,
-                     etas, gammas, fault_xs, slot_hashes):
+    def _scan_rounds_impl(state: FedState, data, round_keys: jax.Array,
+                          num_rounds: int, max_items: int, node_sizes,
+                          etas, gammas, fault_xs, slot_hashes, lr=None):
         # (R, K, S, B) minibatch indices for ALL rounds, sampled on
         # device from per-round keys folded on the ABSOLUTE round index
         # (run_rounds derives them) — segmenting a run cannot change
@@ -822,18 +843,19 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                 # no once-per-round exchange: the gossip runs INSIDE the
                 # step loop (dpsgd is fault-incapable, so sent is None)
                 buf, opt_state, loss = dpsgd_updates_from_idx(
-                    buf, opt_state, layout, eta_r, gamma_r, data, idx_r)
+                    buf, opt_state, layout, eta_r, gamma_r, data, idx_r,
+                    lr=lr)
             elif flat_local:
                 mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
                                         layout, tstate, rnd, sent=sent)
                 buf, opt_state, loss = flat_local_updates_from_idx(
-                    mixed, opt_state, layout, data, idx_r)
+                    mixed, opt_state, layout, data, idx_r, lr=lr)
             else:
                 mixed, tstate = mix_buf(buf, state.sizes, eta_r, gamma_r,
                                         layout, tstate, rnd, sent=sent)
                 params, opt_state, loss = leaf_local_updates_from_idx(
                     flatten.unflatten(mixed, layout), opt_state,
-                    data, idx_r)
+                    data, idx_r, lr=lr)
                 buf = flatten.flatten(params, layout)[0]
             metrics = _flat_metrics(buf, layout, loss, gamma_r)
             if hier_fmt:
@@ -877,6 +899,195 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                          state.ratios, state.sizes, rnd, tstate, prev,
                          ist)
         return final, metrics
+
+    # single-run scan: the exact pre-batching entry point (lr defaults
+    # to None, so the TrainConfig rate stays a trace constant and the
+    # jaxpr is bit-identical to previous builds)
+    _scan_rounds = partial(jax.jit,
+                           static_argnames=("num_rounds", "max_items"),
+                           donate_argnums=(0,))(_scan_rounds_impl)
+
+    # batched (vmapped) scan drivers, built lazily per sharing mode:
+    # variant-invariant inputs (the resident datasets, fault schedules,
+    # slot hashes, and — when every variant runs the same scenario —
+    # the eta stacks) ride in with in_axes=None, so a 32-seed sweep
+    # never materializes 32 copies of the data or the (R, K, K) graphs.
+    _batched_cache: dict = {}
+
+    def _batched_scan(shared_etas: bool, lr_mapped: bool,
+                      num_rounds: int, max_items: int):
+        key = (shared_etas, lr_mapped, num_rounds, max_items)
+        if key not in _batched_cache:
+            def run(state, data, round_keys, node_sizes, etas, gammas,
+                    fault_xs, slot_hashes, lr):
+                return _scan_rounds_impl(state, data, round_keys,
+                                         num_rounds, max_items,
+                                         node_sizes, etas, gammas,
+                                         fault_xs, slot_hashes, lr)
+            axes = (0, None, 0, None, None if shared_etas else 0, 0,
+                    None, None, 0 if lr_mapped else None)
+            _batched_cache[key] = jax.jit(jax.vmap(run, in_axes=axes),
+                                          donate_argnums=(0,))
+        return _batched_cache[key]
+
+    def run_rounds_batch(states: FedState, data, num_rounds: int, *,
+                         rngs: Optional[jax.Array] = None,
+                         n_items: Optional[jax.Array] = None,
+                         eta_stacks=None, gamma_stacks=None, lrs=None):
+        """Batched multi-round driver: V whole runs under ONE compiled
+        ``vmap(scan)`` — the fleet-sweep twin of :func:`run_rounds`.
+
+        states: a (V,)-stacked FedState (every leaf gains a leading
+               variant axis; stack V ``init`` results, or broadcast one)
+               — donated, like the single-run scan. All variants must
+               sit at the same round.
+        data:  ONE node-stacked dataset pytree, SHARED by every variant
+               (vmapped with ``in_axes=None`` — no V-fold copy).
+        rngs:  per-variant batch-sampling base keys, (V, 2) stacked (or
+               one key, broadcast); per-round keys fold on the ABSOLUTE
+               round index per variant, so a batched run reproduces V
+               single runs exactly.
+        eta_stacks: per-variant mixing stacks — dense ``(V, R, K, K)``
+               or ``SparseEta`` with ``(V, R, K, D)`` stacks — or ONE
+               shared ``(R, K, K)`` / ``(R, K, D)`` stack (kept
+               variant-invariant on device); ``None`` derives the
+               config's own shared stacks via :func:`mixing_stack`.
+        gamma_stacks: ``(V, R)`` / ``(R,)`` per-round step sizes;
+               derived from ``eta_stacks`` via the stability bound when
+               omitted.
+        lrs:   optional (V,) per-variant learning rates — promoted to a
+               runtime argument of the shared program; ``None`` keeps
+               the TrainConfig rate baked in.
+        Returns ``(final_states, metrics)`` with every leaf/metric
+        stacked along a leading (V,) axis (metrics: ``(V, R, K)``).
+        """
+        from repro import mobility as mobility_lib
+        from repro.mobility import mixing as mobility_mixing
+        if hier_fmt:
+            raise ValueError(
+                "batched execution does not support mixing_format="
+                "'hierarchical' yet — the two-tier HierEta stacks carry "
+                "per-round cluster geometry that differs per variant "
+                "(recorded ROADMAP follow-on); run hierarchical sweeps "
+                "one variant at a time")
+        k = fed.num_nodes
+        import numpy as _np
+        rounds_arr = _np.asarray(states.round)
+        if rounds_arr.ndim != 1:
+            raise ValueError(
+                "run_rounds_batch needs a (V,)-stacked FedState — stack "
+                f"init results along a leading variant axis (round "
+                f"counter has shape {rounds_arr.shape})")
+        v = rounds_arr.shape[0]
+        if not (rounds_arr == rounds_arr[0]).all():
+            raise ValueError(
+                f"all variants must sit at the same round to share one "
+                f"scan (got rounds {rounds_arr.tolist()})")
+        start = int(rounds_arr[0])
+        data = jax.tree.map(jnp.asarray, data)
+        max_items = jax.tree.leaves(data)[0].shape[1]
+        slot_hashes = ()
+        if ingest_on:
+            if max_items not in ingest_plans:
+                plan = ingest_scenarios.compile_plan(ingest_cfg,
+                                                     fed.num_nodes,
+                                                     max_items)
+                ingest_plans[max_items] = (
+                    jnp.asarray(plan.src_node),
+                    jnp.asarray(plan.src_slot),
+                    ingest_sketches.slot_hashes(
+                        jnp.asarray(plan.item_ids), ingest_cfg))
+            src_node, src_slot, slot_hashes = ingest_plans[max_items]
+            data = _ingest_gather(data, src_node, src_slot)
+        if n_items is not None:
+            n_items = jnp.asarray(n_items)
+        if rngs is None:
+            rngs = jax.random.PRNGKey(train.seed + 1)
+        rngs = jnp.asarray(rngs)
+        if rngs.ndim == 1:
+            rngs = jnp.broadcast_to(rngs[None], (v,) + rngs.shape)
+        if rngs.shape[0] != v:
+            raise ValueError(f"rngs leading dim {rngs.shape[0]} != "
+                             f"V={v} variants")
+        rr = jnp.arange(start, start + num_rounds)
+        round_keys = jax.vmap(
+            lambda key: jax.vmap(
+                lambda r: jax.random.fold_in(key, r))(rr))(rngs)
+        # -- mixing stacks: shared (in_axes=None) or per-variant --------
+        if eta_stacks is None:
+            state0 = jax.tree.map(lambda a: a[0], states)
+            etas, gammas = mixing_stack(state0, num_rounds, start=start)
+            shared = True
+        elif isinstance(eta_stacks, topology.SparseEta):
+            if not sparse_fmt:
+                raise ValueError(
+                    "a SparseEta stack needs mixing_format='sparse'")
+            etas = topology.SparseEta(
+                jnp.asarray(eta_stacks.idx, jnp.int32),
+                jnp.asarray(eta_stacks.val, jnp.float32))
+            shared = etas.idx.ndim == 3
+            d = etas.idx.shape[-1]
+            expect = ((num_rounds, k, d) if shared
+                      else (v, num_rounds, k, d))
+            if etas.idx.shape != expect or etas.val.shape != expect:
+                raise ValueError(
+                    f"sparse eta stacks idx={etas.idx.shape} "
+                    f"val={etas.val.shape} != {expect}")
+            gammas = gamma_stacks
+            if gammas is None:
+                fn = lambda e: mobility_mixing.sparse_gamma_stack(
+                    e, fed.gamma)
+                gammas = fn(etas) if shared else jax.vmap(fn)(etas)
+        else:
+            if sparse_fmt:
+                raise ValueError(
+                    "mixing_format='sparse' needs SparseEta stacks "
+                    f"(got dense array {jnp.shape(eta_stacks)})")
+            etas = jnp.asarray(eta_stacks, jnp.float32)
+            shared = etas.ndim == 3
+            expect = ((num_rounds, k, k) if shared
+                      else (v, num_rounds, k, k))
+            if etas.shape != expect:
+                raise ValueError(f"eta stacks shape {etas.shape} != "
+                                 f"{expect}")
+            gammas = gamma_stacks
+            if gammas is None:
+                fn = lambda e: mobility_lib.gamma_stack(e, fed.gamma)
+                gammas = fn(etas) if shared else jax.vmap(fn)(etas)
+        # gammas are small — always normalized to a mapped (V, R) stack
+        gammas = jnp.asarray(gammas, jnp.float32)
+        if gammas.ndim == 1:
+            gammas = jnp.broadcast_to(gammas[None], (v, num_rounds))
+        if gammas.shape != (v, num_rounds):
+            raise ValueError(f"gamma stacks shape {gammas.shape} != "
+                             f"{(v, num_rounds)}")
+        if lrs is not None:
+            lrs = jnp.asarray(lrs, jnp.float32)
+            if lrs.shape != (v,):
+                raise ValueError(f"lrs shape {lrs.shape} != ({v},)")
+        fault_xs = ()
+        if faulty:
+            # ONE fault plan shared by every variant (the schedule is
+            # config-keyed); the surviving-link mask folds into each
+            # variant's eta stack host-side, exactly as run_rounds does
+            plan = faults_lib.compile_plan(fed.faults, num_rounds, k,
+                                           start=start)
+            mask = jnp.asarray(plan.link_mask)
+            if isinstance(etas, topology.SparseEta):
+                fold = lambda e: mobility_mixing.masked_sparse_stack(
+                    e, mask)
+            else:
+                fold = lambda e: mobility_mixing.masked_eta_stack(
+                    e, mask)
+            etas = fold(etas) if shared else jax.vmap(fold)(etas)
+            fault_xs = (jnp.asarray(plan.health),
+                        jnp.asarray(plan.byz),
+                        jnp.asarray(plan.corrupt),
+                        jnp.asarray(plan.straggle))
+        fn = _batched_scan(shared, lrs is not None, num_rounds,
+                           max_items)
+        return fn(states, data, round_keys, n_items, etas, gammas,
+                  fault_xs, slot_hashes, lrs)
 
     def run_rounds(state: FedState, data, num_rounds: int,
                    rng: Optional[jax.Array] = None,
@@ -1035,26 +1246,5 @@ def build_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
                             n_items, etas, gammas, fault_xs, slot_hashes)
 
     return Trainer(init=init, round=jax.jit(round_fn), eta_fn=eta_fn,
-                   run_rounds=run_rounds, mixing_stack=mixing_stack)
-
-
-def make_trainer(loss_fn: Callable, fed: FedConfig, train: TrainConfig,
-                 eval_fn: Optional[Callable] = None,
-                 transport: Any = None) -> Trainer:
-    """Deprecated alias for :func:`build_trainer`.
-
-    Prefer the declarative façade::
-
-        from repro.experiment import Experiment
-        session = Experiment.from_parts(loss_fn, init_params,
-                                        fed=fed, train=train).compile(...)
-
-    or :func:`build_trainer` for direct trainer access. Kept as a thin
-    shim so pre-registry call sites keep working unchanged.
-    """
-    warnings.warn(
-        "make_trainer is deprecated; use repro.experiment.Experiment "
-        "(declarative session API) or repro.core.cdfl.build_trainer",
-        DeprecationWarning, stacklevel=2)
-    return build_trainer(loss_fn, fed, train, eval_fn=eval_fn,
-                         transport=transport)
+                   run_rounds=run_rounds, mixing_stack=mixing_stack,
+                   run_rounds_batch=run_rounds_batch)

@@ -1,7 +1,7 @@
 """Declarative experiment/session API — the user-facing façade over the
 C-DFL machinery.
 
-Instead of hand-wiring ``make_trainer`` + ``trainer.init`` +
+Instead of hand-wiring ``build_trainer`` + ``trainer.init`` +
 ``run_rounds(eval_fn=..., n_items=...)`` in every caller, an experiment
 is declared once and compiled into a resumable session::
 
@@ -57,6 +57,7 @@ from repro.core.cdfl import FedState, Trainer, build_trainer
 
 __all__ = [
     "Experiment", "Session", "RunResult",
+    "SweepAxes", "BatchedSession", "BatchResult",
     "Callback", "EvalCallback", "CheckpointCallback", "ChurnLogCallback",
     "DegreeStatsCallback", "HealthCallback", "IngestCallback",
 ]
@@ -93,7 +94,7 @@ class Callback:
 class EvalCallback(Callback):
     """Per-round evaluation as a device-side scan metric: the stacked
     ``(R, K)`` values appear under ``result.metrics[name]`` with no
-    per-round host sync (subsumes the old ``make_trainer(eval_fn=...)``
+    per-round host sync (subsumes the old ``build_trainer(eval_fn=...)``
     kwarg)."""
 
     def __init__(self, eval_fn: Callable, name: str = "eval"):
@@ -260,6 +261,101 @@ class RunResult:
 
 
 # --------------------------------------------------------------------------
+# Batched fleet sweeps.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepAxes:
+    """What varies across the V variants of a batched fleet sweep.
+
+    Every axis is optional; the variant set is the CROSS PRODUCT of the
+    given axes (last axis fastest, like nested loops). The axes are the
+    run inputs the batched driver can map at RUNTIME against one shared
+    device program:
+
+    seeds:    an int N (seeds ``0..N-1``) or an explicit sequence —
+              seed ``s`` inits params from ``PRNGKey(s)`` and samples
+              batches from ``PRNGKey(s + 1)``.
+    lr:       per-variant learning rates (promoted from trace-time
+              constant to a runtime argument; not available when the
+              config's learning rate is a schedule).
+    gamma:    per-variant consensus step-size caps (eq. 5's gamma,
+              bounded per round by the stability bound as usual).
+    mobility: per-variant ``MobilityConfig`` (or ``None`` for the
+              static graph) — each variant runs its own kinematic
+              scenario via a per-variant ``(V, R, K, K)`` /
+              ``(V, R, K, D)`` stack.
+
+    Everything else — fleet size, topology family, transport, local
+    steps, fault plan, model — is config-static: trace-shaping, shared
+    by all variants. Sweep those by building one batch per config.
+    """
+
+    seeds: Any = None
+    lr: Optional[Sequence[float]] = None
+    gamma: Optional[Sequence[float]] = None
+    mobility: Optional[Sequence[Any]] = None
+
+    def seed_list(self) -> Optional[list]:
+        if self.seeds is None:
+            return None
+        if isinstance(self.seeds, int):
+            if self.seeds <= 0:
+                raise ValueError(f"seeds count must be positive, got "
+                                 f"{self.seeds}")
+            return list(range(self.seeds))
+        seeds = [int(s) for s in self.seeds]
+        if not seeds:
+            raise ValueError("seeds sequence is empty")
+        return seeds
+
+    def variants(self) -> list:
+        """The cross product, as a list of (seed, lr, gamma, mobility)
+        namedtuple-like dicts; unswept axes hold ``None``."""
+        axes = [
+            ("seed", self.seed_list()),
+            ("lr", list(self.lr) if self.lr is not None else None),
+            ("gamma", list(self.gamma) if self.gamma is not None
+             else None),
+            ("mobility", list(self.mobility) if self.mobility is not None
+             else None),
+        ]
+        swept = [(name, vals) for name, vals in axes if vals is not None]
+        if not swept:
+            raise ValueError(
+                "SweepAxes needs at least one axis (seeds / lr / gamma "
+                "/ mobility)")
+        for name, vals in swept:
+            if len(vals) == 0:
+                raise ValueError(f"sweep axis {name!r} is empty")
+        out = [dict(seed=None, lr=None, gamma=None, mobility=None)]
+        for name, vals in swept:
+            out = [dict(v, **{name: val}) for v in out for val in vals]
+        return out
+
+
+@dataclasses.dataclass
+class BatchResult(RunResult):
+    """What one :meth:`BatchedSession.run_batch` produced: every leaf of
+    ``state`` and every metric carries a leading (V,) variant axis
+    (metrics: ``(V, R, K)``); ``variants`` names what each slot ran."""
+
+    variants: Sequence[dict] = ()
+
+    @property
+    def num_variants(self) -> int:
+        return len(self.variants)
+
+    def select(self, i: int) -> RunResult:
+        """The single-variant view: variant ``i``'s final state and
+        ``(R, K)`` metrics as a plain :class:`RunResult`."""
+        return RunResult(
+            state=jax.tree.map(lambda a: a[i], self.state),
+            metrics={k: v[i] for k, v in self.metrics.items()},
+            rounds=self.rounds, wall_time_s=self.wall_time_s)
+
+
+# --------------------------------------------------------------------------
 # Experiment.
 # --------------------------------------------------------------------------
 
@@ -397,6 +493,56 @@ class Experiment:
         return Session(self, data, state, n_items=n_items,
                        sample_rng=sample_rng)
 
+    def compile_batch(self, data, node_items, axes: SweepAxes, *,
+                      rng: Optional[jax.Array] = None,
+                      sample_rng: Optional[jax.Array] = None,
+                      n_items=None,
+                      same_init: bool = True) -> "BatchedSession":
+        """Build a :class:`BatchedSession`: V variant runs — the cross
+        product of ``axes`` — compiled into ONE vmapped scan over a
+        (V,)-stacked :class:`FedState`.
+
+        The dataset, node sketches and any fault plan are SHARED by all
+        variants (mapped with ``in_axes=None`` — one device copy);
+        per-variant state costs ``V x (K, P)`` params plus two Adam
+        moment buffers of the same shape, so budget roughly ``3 V K P``
+        f32 on top of a single run. ``rng``/``sample_rng`` seed the
+        variants only when the seed axis is unswept (a swept seed ``s``
+        uses ``PRNGKey(s)`` / ``PRNGKey(s + 1)``).
+        """
+        if (axes.lr is not None and callable(self.train.learning_rate)):
+            raise ValueError(
+                "cannot sweep lr: this experiment's learning rate is a "
+                "schedule (callable); per-variant rates only override "
+                "constant rates")
+        variants = axes.variants()
+        if rng is None:
+            rng = jax.random.PRNGKey(self.train.seed)
+        if sample_rng is None:
+            sample_rng = jax.random.PRNGKey(self.train.seed + 1)
+        data = jax.tree.map(jnp.asarray, data)
+        trainer = self.trainer(data)
+        _, init_params = self._model_fns(data)
+        node_items = jnp.asarray(node_items)
+        # one init per UNIQUE seed (the only axis that changes init),
+        # then assemble the (V,)-stacked state once at compile time
+        inits: dict[Any, FedState] = {}
+        for v in variants:
+            if v["seed"] not in inits:
+                r = (rng if v["seed"] is None
+                     else jax.random.PRNGKey(v["seed"]))
+                inits[v["seed"]] = trainer.init(r, init_params,
+                                                node_items,
+                                                same_init=same_init)
+        states = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[inits[v["seed"]] for v in variants])
+        rngs = jnp.stack([
+            (sample_rng if v["seed"] is None
+             else jax.random.PRNGKey(v["seed"] + 1)) for v in variants])
+        return BatchedSession(self, data, states, variants, rngs, axes,
+                              n_items=n_items)
+
 
 # --------------------------------------------------------------------------
 # Session.
@@ -502,6 +648,133 @@ class Session:
                 f"different algorithm/transport/fault config or model "
                 f"size, or is it corrupt?): {e}") from e
         return self
+
+
+# --------------------------------------------------------------------------
+# BatchedSession.
+# --------------------------------------------------------------------------
+
+class BatchedSession:
+    """V variant runs compiled into one vmapped scan: a (V,)-stacked
+    :class:`FedState` over shared resident data. Not constructed
+    directly — use :meth:`Experiment.compile_batch`.
+
+    Unlike :class:`Session` this is NOT resumable: a batched run is a
+    one-shot sweep (checkpointing V entangled variants into the
+    single-run checkpoint format would silently break the
+    segmentation-invariance contract), so :meth:`save` and
+    :meth:`resume` raise. Re-run the winning variant through a plain
+    ``compile()`` Session when it needs checkpoints."""
+
+    def __init__(self, experiment: Experiment, data, states: FedState,
+                 variants: Sequence[dict], rngs: jax.Array,
+                 axes: SweepAxes, *, n_items=None):
+        self.experiment = experiment
+        self.data = data
+        self._states = states
+        self.variants = list(variants)
+        self._rngs = rngs
+        self._axes = axes
+        self._n_items = None if n_items is None else jnp.asarray(n_items)
+
+    @property
+    def num_variants(self) -> int:
+        return len(self.variants)
+
+    @property
+    def states(self) -> FedState:
+        """The live (V,)-stacked federated state (donated to each
+        batched scan — do not hold references across runs)."""
+        return self._states
+
+    @property
+    def rounds_completed(self) -> int:
+        return int(np.asarray(self._states.round)[0])
+
+    def run_batch(self, rounds: int,
+                  callbacks: Sequence[Callback] = ()) -> BatchResult:
+        """Advance ALL variants ``rounds`` federated rounds in ONE
+        device program — one trace, one dispatch, V runs.
+
+        Only scan-riding callbacks are allowed (one
+        :class:`EvalCallback`, run-boundary hooks): periodic
+        ``every=N`` callbacks segment the scan with host-side work per
+        variant, which defeats the batching — they raise here.
+        """
+        if rounds <= 0:
+            raise ValueError(f"rounds must be positive, got {rounds}")
+        callbacks = list(callbacks)
+        for cb in callbacks:
+            if cb.every:
+                raise ValueError(
+                    f"{type(cb).__name__}(every={cb.every}) needs "
+                    f"host-side scan segmentation — unsupported on "
+                    f"batched runs; use a plain Session per variant "
+                    f"for periodic callbacks")
+        eval_fns = [cb.eval_fn for cb in callbacks
+                    if cb.eval_fn is not None]
+        if len(eval_fns) > 1:
+            raise ValueError("at most one EvalCallback per run")
+        trainer = self.experiment.trainer(
+            self.data, eval_fn=eval_fns[0] if eval_fns else None)
+        for cb in callbacks:
+            cb.on_run_start(self, rounds)
+        t0 = time.time()
+        start = self.rounds_completed
+        etas = gammas = None
+        mob_swept = self._axes.mobility is not None
+        gamma_swept = self._axes.gamma is not None
+        if mob_swept or gamma_swept:
+            # per-variant graphs: build each UNIQUE (scenario, cap)
+            # stack once, share when the cross product collapses to one
+            state0 = jax.tree.map(lambda a: a[0], self._states)
+            keys = [(v["mobility"] if mob_swept else "config",
+                     v["gamma"] if gamma_swept else None)
+                    for v in self.variants]
+            uniq: Dict[Any, Any] = {}
+            for key in keys:
+                if key not in uniq:
+                    uniq[key] = trainer.mixing_stack(
+                        state0, rounds, start=start, mobility=key[0],
+                        gamma_cap=key[1])
+            if len(uniq) == 1:
+                etas, gammas = next(iter(uniq.values()))
+            else:
+                from repro.mobility import mixing as mobility_mixing
+                etas = mobility_mixing.stack_variant_stacks(
+                    [uniq[k][0] for k in keys])
+                gammas = jnp.stack([jnp.asarray(uniq[k][1], jnp.float32)
+                                    for k in keys])
+        lrs = None
+        if self._axes.lr is not None:
+            lrs = jnp.asarray([v["lr"] for v in self.variants],
+                              jnp.float32)
+        self._states, metrics = trainer.run_rounds_batch(
+            self._states, self.data, rounds, rngs=self._rngs,
+            n_items=self._n_items, eta_stacks=etas,
+            gamma_stacks=gammas, lrs=lrs)
+        jax.block_until_ready(self._states.params)
+        result = BatchResult(state=self._states, metrics=metrics,
+                             rounds=rounds,
+                             wall_time_s=time.time() - t0,
+                             variants=self.variants)
+        for cb in callbacks:
+            cb.on_run_end(self, result)
+        return result
+
+    # -- checkpoint / resume: deliberately unsupported ----------------------
+    def save(self, path: str) -> str:
+        raise ValueError(
+            "cannot checkpoint a batched run: the (V,)-stacked state "
+            "does not fit the single-run checkpoint format. Re-run the "
+            "variant you want to keep through Experiment.compile() and "
+            "save that Session.")
+
+    def resume(self, path: str) -> "BatchedSession":
+        raise ValueError(
+            "cannot resume a batched run: batched sessions are one-shot "
+            "sweeps. Resume single-run checkpoints through "
+            "Experiment.compile().resume(path).")
 
 
 # --------------------------------------------------------------------------

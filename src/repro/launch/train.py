@@ -41,13 +41,64 @@ from repro.configs.base import (FaultConfig, FedConfig, HierarchyConfig,
 from repro.configs.registry import ARCHS, get_smoke_arch
 from repro.data import pipeline, redundancy, synthetic
 from repro.experiment import (ChurnLogCallback, DegreeStatsCallback,
-                              Experiment, HealthCallback, IngestCallback)
+                              Experiment, HealthCallback, IngestCallback,
+                              SweepAxes)
 from repro.mobility.links import LINK_QUALITIES
 
 
 def _print_round(r, loss, disagree, dt):
     print(f"round {r:3d} loss/node={np.round(loss, 3)} "
           f"mean={loss.mean():.4f} disagree={disagree:.2e} ({dt:.1f}s)")
+
+
+_SWEEP_AXES = ("seeds", "lr", "gamma", "mobility")
+
+
+def _parse_sweep(spec: str) -> dict:
+    """``--sweep`` axis spec -> {axis: values}, validated here so a bad
+    spec fails at argparse time, not after data/model setup.
+
+    Grammar: comma-separated ``axis=value[:value...]`` — e.g.
+    ``seeds=8`` (counts as seeds 0..7), ``seeds=3:7:11`` (explicit),
+    ``lr=1e-3:3e-3``, ``gamma=0.5:0.8``,
+    ``mobility=static:platoon:manhattan``.
+    """
+    from repro import registry as _registry
+    _registry.ensure_plugins()
+    axes: dict = {}
+    for part in spec.split(","):
+        name, eq, vals = part.partition("=")
+        name = name.strip()
+        if not eq or not vals:
+            raise argparse.ArgumentTypeError(
+                f"bad sweep axis {part!r}: expected axis=v1[:v2...] "
+                f"(axes: {', '.join(_SWEEP_AXES)})")
+        if name not in _SWEEP_AXES:
+            raise argparse.ArgumentTypeError(
+                f"unknown sweep axis {name!r} (axes: "
+                f"{', '.join(_SWEEP_AXES)})")
+        if name in axes:
+            raise argparse.ArgumentTypeError(
+                f"duplicate sweep axis {name!r}")
+        items = vals.split(":")
+        try:
+            if name == "seeds":
+                axes[name] = (int(items[0]) if len(items) == 1
+                              else [int(v) for v in items])
+            elif name == "mobility":
+                known = ("static",) + _registry.mobility_traces.names()
+                for m in items:
+                    if m not in known:
+                        raise argparse.ArgumentTypeError(
+                            f"unknown mobility scenario {m!r} in --sweep "
+                            f"(choices: {', '.join(known)})")
+                axes[name] = items
+            else:
+                axes[name] = [float(v) for v in items]
+        except ValueError as e:
+            raise argparse.ArgumentTypeError(
+                f"bad value in sweep axis {part!r}: {e}") from None
+    return axes
 
 
 def main() -> None:
@@ -168,10 +219,31 @@ def main() -> None:
                          "eq. 5 weighted mix (dense transport only)")
     ap.add_argument("--trim", type=int, default=1,
                     help="per-side trim count for --robust trimmed_mean")
+    ap.add_argument("--sweep", type=_parse_sweep, default=None,
+                    metavar="AXES",
+                    help="batched fleet sweep: run the cross product of "
+                         "axis=v1[:v2...] variants (axes: seeds, lr, "
+                         "gamma, mobility) under ONE vmapped scan via "
+                         "Session.run_batch — e.g. "
+                         "--sweep seeds=8,lr=1e-3:3e-3 — and print a "
+                         "per-variant results table (needs --driver "
+                         "scan; incompatible with --checkpoint: batched "
+                         "runs don't checkpoint)")
     ap.add_argument("--quick", action="store_true",
                     help="tiny model + corpus for CI smoke runs")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
+
+    if args.sweep is not None:
+        if args.driver != "scan":
+            ap.error("--sweep needs --driver scan (the batched runs "
+                     "share one vmapped scan)")
+        if args.checkpoint:
+            ap.error("--sweep cannot --checkpoint (batched sessions are "
+                     "one-shot; re-run the winning variant to save it)")
+        if args.mixing_format == "hierarchical" or args.hierarchy:
+            ap.error("--sweep does not support the hierarchical mixing "
+                     "format yet (ROADMAP follow-on)")
 
     # --redundancy is overloaded: a float keeps the legacy host-side
     # duplicate injection (static CND ratios), a scenario name activates
@@ -270,6 +342,10 @@ def main() -> None:
     batcher_items = pipeline.FederatedBatcher(nodes, args.batch,
                                               args.local_steps)
 
+    if args.sweep is not None:
+        _run_sweep(args, run_cfg, data, batcher_items.node_items())
+        return
+
     # the Experiment derives the token-LM loss/init from RunConfig.model
     session = Experiment(run_cfg).compile(data, batcher_items.node_items())
     state = session.state
@@ -354,6 +430,51 @@ def main() -> None:
     if args.checkpoint:
         save(args.checkpoint, state.params, step=args.rounds)
         print("saved params to", args.checkpoint)
+
+
+def _run_sweep(args, run_cfg, data, node_items) -> None:
+    """``--sweep``: the variant cross product through
+    ``Experiment.compile_batch`` — V runs, ONE device program — plus the
+    per-variant results table and the greppable SWEEP_SMOKE verdict."""
+    spec = args.sweep
+    mob_axis = None
+    if "mobility" in spec:
+        mob_axis = [None if m == "static" else MobilityConfig(
+            kind=m, radio_range=args.radio_range, speed=args.speed,
+            speed_jitter=args.speed_jitter, seed=args.mobility_seed,
+            link_quality=args.link_quality) for m in spec["mobility"]]
+    axes = SweepAxes(seeds=spec.get("seeds"), lr=spec.get("lr"),
+                     gamma=spec.get("gamma"), mobility=mob_axis)
+    batched = Experiment(run_cfg).compile_batch(data, node_items, axes)
+    v = batched.num_variants
+    print(f"sweep: {v} variants x {args.rounds} rounds "
+          f"(axes: {', '.join(sorted(spec))}) — one vmapped scan")
+    result = batched.run_batch(args.rounds)
+    losses = np.asarray(result.metrics["loss"])          # (V, R, K)
+    first = losses[:, 0].mean(axis=-1)
+    final = losses[:, -1].mean(axis=-1)
+    dis = np.asarray(result.metrics["disagreement"])[:, -1]
+    print(f"{'variant':>7} {'seed':>5} {'lr':>9} {'gamma':>6} "
+          f"{'mobility':>10} {'loss_r0':>8} {'loss_rN':>8} "
+          f"{'disagree':>9}")
+    for i, var in enumerate(result.variants):
+        mob = var["mobility"]
+        seed_s = "-" if var["seed"] is None else str(var["seed"])
+        lr_s = "-" if var["lr"] is None else f"{var['lr']:.1e}"
+        g_s = "-" if var["gamma"] is None else f"{var['gamma']:.2f}"
+        mob_s = ("-" if "mobility" not in spec
+                 else (mob.kind if mob is not None else "static"))
+        print(f"{i:>7d} {seed_s:>5} {lr_s:>9} {g_s:>6} {mob_s:>10} "
+              f"{first[i]:>8.4f} {final[i]:>8.4f} {dis[i]:>9.2e}")
+    per_round = result.wall_time_s / max(args.rounds, 1)
+    print(f"total {result.wall_time_s:.1f}s for {v} runs "
+          f"({per_round * 1e3:.1f} ms/round for the whole fleet batch)")
+    improved = int((final < first).sum())
+    ok = (np.isfinite(losses).all() and v == len(result.variants)
+          and improved == v)
+    print(f"SWEEP_SMOKE {'ok' if ok else 'FAIL'} variants={v} "
+          f"improved={improved}/{v} "
+          f"loss_rN_mean={float(final.mean()):.4f}")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,8 @@ from repro.mobility.links import (degree_stats, handover_stats,
 from repro.mobility.mixing import (constant_sparse_stacks, constant_stacks,
                                    eta_stack, gamma_stack,
                                    masked_sparse_stack, sparse_eta_stack,
-                                   sparse_gamma_stack)
+                                   sparse_gamma_stack,
+                                   stack_variant_stacks)
 from repro.mobility.traces import trace
 
 __all__ = [
@@ -43,7 +44,8 @@ __all__ = [
     "sparse_radio_stack", "handover_stats", "degree_stats",
     "num_components", "eta_stack", "gamma_stack", "sparse_eta_stack",
     "sparse_gamma_stack", "constant_stacks", "constant_sparse_stacks",
-    "masked_sparse_stack", "links", "mixing", "traces",
+    "masked_sparse_stack", "stack_variant_stacks", "links", "mixing",
+    "traces",
 ]
 
 

@@ -152,3 +152,19 @@ def constant_sparse_stacks(sp: topology.SparseEta, gamma, rounds: int):
                 jnp.broadcast_to(idx, (rounds,) + idx.shape),
                 jnp.broadcast_to(val, (rounds,) + val.shape)),
             jnp.broadcast_to(jnp.asarray(gamma, jnp.float32), (rounds,)))
+
+
+def stack_variant_stacks(stacks):
+    """Stack per-VARIANT per-round mixing stacks along a new leading
+    (V,) axis for the batched fleet driver: dense ``(R, K, K)`` arrays
+    become ``(V, R, K, K)``; ``SparseEta`` ``(R, K, D)`` pairs become
+    one ``SparseEta`` with ``(V, R, K, D)`` stacks (stacked leaf-wise —
+    no dense intermediate). Only call this when variants genuinely
+    differ: V copies of one scenario should stay a single shared stack
+    (``run_rounds_batch`` maps shared stacks with ``in_axes=None``)."""
+    first = stacks[0]
+    if isinstance(first, topology.SparseEta):
+        return topology.SparseEta(
+            jnp.stack([jnp.asarray(s.idx) for s in stacks]),
+            jnp.stack([jnp.asarray(s.val) for s in stacks]))
+    return jnp.stack([jnp.asarray(s) for s in stacks])

@@ -42,7 +42,7 @@ def adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
         v = jax.tree.map(jnp.zeros_like, zeros)
         return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
 
-    def update(grads, state: AdamState, params):
+    def update(grads, state: AdamState, params, lr=None):
         if grad_clip > 0.0:
             gnorm = global_norm(grads)
             scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
@@ -52,7 +52,10 @@ def adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
         b1t = jnp.asarray(b1, jnp.float32) ** tf
         b2t = jnp.asarray(b2, jnp.float32) ** tf
         corr = jnp.sqrt(1.0 - b2t) / (1.0 - b1t)          # paper eq. (8)
-        lr = lr_at(t)
+        # ``lr`` overrides the constructor's learning rate at RUNTIME —
+        # a traced scalar under vmap lets V variants with different
+        # rates share one compiled program (batched fleet sweeps)
+        lr = lr_at(t) if lr is None else jnp.asarray(lr, jnp.float32)
 
         def upd(m, v, g, p):
             g32 = g.astype(jnp.float32)
@@ -120,7 +123,8 @@ def flat_adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
                              m=jnp.zeros_like(buf, dtype=jnp.float32),
                              v=jnp.zeros_like(buf, dtype=jnp.float32))
 
-    def update(gbuf: jax.Array, state: FlatAdamState, buf: jax.Array):
+    def update(gbuf: jax.Array, state: FlatAdamState, buf: jax.Array,
+               lr=None):
         g = gbuf.astype(jnp.float32)
         if grad_clip > 0.0:
             gnorm = jnp.sqrt(jnp.sum(jnp.square(g)))
@@ -130,9 +134,14 @@ def flat_adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
         b1t = jnp.asarray(b1, jnp.float32) ** tf
         b2t = jnp.asarray(b2, jnp.float32) ** tf
         corr = jnp.sqrt(1.0 - b2t) / (1.0 - b1t)          # paper eq. (8)
-        # broadcast to t's shape up front: a constant learning rate is
+        # ``lr=None`` keeps the constructor's (possibly scheduled) rate;
+        # a runtime value — traced per variant under vmap — overrides it
+        # so batched sweeps promote lr from trace constant to argument.
+        # Broadcast to t's shape up front: a constant learning rate is
         # 0-d even when the step counters are (K,)
-        lr = jnp.broadcast_to(jnp.asarray(lr_at(t), jnp.float32), t.shape)
+        lr = jnp.broadcast_to(
+            jnp.asarray(lr_at(t) if lr is None else lr, jnp.float32),
+            t.shape)
         # per-node (K,) scalars broadcast over the trailing P axis when
         # the caller passes the node-stacked buffer without vmapping
         expand = (slice(None),) * t.ndim + (None,) * (buf.ndim - t.ndim)

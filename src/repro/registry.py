@@ -35,7 +35,7 @@ Registering a plugin is one decorator at its definition site::
 and the name immediately works everywhere a registered name does:
 ``MobilityConfig(kind="convoy")`` validates at construction,
 ``launch/train.py --mobility convoy`` appears in the CLI (choices are
-derived from the registries), and ``Experiment``/``make_trainer``
+derived from the registries), and ``Experiment``/``build_trainer``
 dispatch to it — no edits outside the plugin.
 
 This module imports nothing from ``repro`` at module scope (configs

@@ -1,0 +1,206 @@
+"""Batched fleet execution (vmapped whole-run sweeps).
+
+The contract under test: ``run_rounds_batch`` / ``run_batch`` — V whole
+runs under ONE vmapped donated scan — equals the Python loop of
+single-run scans to 1e-5, per transport (dense fused matmul, gossip
+bounded-staleness snapshots), under a platoon mobility stack, and
+composed with a crash fault plan; per-variant rng folding reproduces
+each looped run's batch draws exactly. Runs under hypothesis when
+installed (CI); falls back to a seeded sweep locally.
+
+Also pinned: the façade surface (SweepAxes cross product, per-variant
+lr/gamma/mobility stacks, (V, R, K) metrics), and the deliberate
+non-goals — batched sessions don't checkpoint/resume, don't take
+periodic callbacks, and reject the hierarchical mixing format.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FaultConfig, FedConfig, MobilityConfig,
+                                TrainConfig)
+from repro.core.cdfl import build_trainer
+from repro.experiment import (CheckpointCallback, EvalCallback, Experiment,
+                              SweepAxes)
+
+PLATOON = MobilityConfig(kind="platoon", speed_jitter=0.15, seed=0)
+CRASH = FaultConfig(kinds=("crash",), crash_rate=0.25, seed=3)
+
+
+def _loss(p, b):
+    return jnp.mean((b["x"] @ p["w"] - b["y"][:, None]) ** 2)
+
+
+def _initp(r):
+    return {"w": jax.random.normal(r, (6, 1)) * 0.1}
+
+
+# transport x {static, platoon} x {fault-free, crash plan} — trainers
+# cached so hypothesis examples pay the scan compile once per combo
+COMBOS = [
+    ("dense", None, None),
+    ("dense", PLATOON, None),
+    ("dense", PLATOON, CRASH),
+    ("gossip", None, None),
+    ("gossip", PLATOON, None),
+    ("gossip", PLATOON, CRASH),
+]
+_TRAINERS: dict = {}
+
+
+def _trainer(combo_idx):
+    if combo_idx not in _TRAINERS:
+        transport, mob, faults = COMBOS[combo_idx]
+        fed = FedConfig(num_nodes=4, gamma=0.5, local_steps=2,
+                        algorithm="cdfl", transport=transport,
+                        staleness=2 if transport == "gossip" else 0,
+                        mobility=mob, faults=faults)
+        train = TrainConfig(learning_rate=0.05, batch_size=4)
+        _TRAINERS[combo_idx] = build_trainer(_loss, fed, train)
+    return _TRAINERS[combo_idx]
+
+
+def _check_batched_vs_looped(combo_idx, seed, rounds=3):
+    tr = _trainer(combo_idx)
+    rng = np.random.default_rng(seed)
+    data = {"x": jnp.asarray(rng.normal(size=(4, 24, 6)), jnp.float32),
+            "y": jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)}
+    items = jnp.asarray(rng.integers(0, 40, (4, 24, 4)))
+    seeds = [int(s) for s in rng.integers(0, 1000, 3)]
+    inits = [tr.init(jax.random.PRNGKey(s), _initp, items) for s in seeds]
+    rngs = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
+    finals, mets = [], []
+    for i, s in enumerate(seeds):
+        st = jax.tree.map(jnp.copy, inits[i])
+        fs, m = tr.run_rounds(st, data, rounds, rng=rngs[i])
+        finals.append(fs), mets.append(m)
+    states = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+    fsb, mb = tr.run_rounds_batch(states, data, rounds, rngs=rngs)
+    for i in range(len(seeds)):
+        np.testing.assert_allclose(
+            np.asarray(finals[i].params["w"]),
+            np.asarray(fsb.params["w"][i]), atol=1e-5,
+            err_msg=f"combo {COMBOS[combo_idx]} variant {i} params")
+        np.testing.assert_allclose(
+            np.asarray(mets[i]["loss"]), np.asarray(mb["loss"][i]),
+            atol=1e-5,
+            err_msg=f"combo {COMBOS[combo_idx]} variant {i} loss")
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, len(COMBOS) - 1), st.integers(0, 10_000))
+    def test_batched_matches_looped(combo_idx, seed):
+        _check_batched_vs_looped(combo_idx, seed)
+
+except ImportError:                          # hypothesis not installed
+    def test_batched_matches_looped():
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            _check_batched_vs_looped(int(rng.integers(0, len(COMBOS))),
+                                     int(rng.integers(0, 10_000)))
+
+
+# --- façade: SweepAxes cross product, per-variant stacks ---------------------
+
+def _facade_setup():
+    rng = np.random.default_rng(7)
+    data = {"x": jnp.asarray(rng.normal(size=(4, 24, 6)), jnp.float32),
+            "y": jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)}
+    items = jnp.asarray(rng.integers(0, 40, (4, 24, 4)))
+    return data, items
+
+
+def test_facade_sweep_matches_looped_sessions():
+    """seeds x lr x gamma x mobility cross product through
+    compile_batch == one plain Session per variant, and the eval
+    metric comes back (V, R, K)."""
+    data, items = _facade_setup()
+    fed = FedConfig(num_nodes=4, gamma=0.5, local_steps=2,
+                    algorithm="cdfl")
+    train = TrainConfig(learning_rate=0.05, batch_size=4)
+    exp = Experiment.from_parts(_loss, _initp, fed=fed, train=train)
+    axes = SweepAxes(seeds=[3, 9], lr=[0.05, 0.02],
+                     gamma=[0.5, 0.8], mobility=[None, PLATOON])
+    bs = exp.compile_batch(data, items, axes)
+    assert bs.num_variants == 16
+    evalf = lambda p: jnp.sum(p["w"] ** 2)
+    res = bs.run_batch(3, callbacks=[EvalCallback(evalf, name="wnorm")])
+    assert res.metrics["wnorm"].shape == (16, 3, 4)
+    assert res.metrics["loss"].shape == (16, 3, 4)
+    for i in (0, 5, 10, 15):                  # corners of the product
+        v = res.variants[i]
+        exp_i = Experiment.from_parts(
+            _loss, _initp,
+            fed=dataclasses.replace(fed, gamma=v["gamma"],
+                                    mobility=v["mobility"]),
+            train=dataclasses.replace(train, learning_rate=v["lr"]))
+        s = exp_i.compile(data, items,
+                          rng=jax.random.PRNGKey(v["seed"]),
+                          sample_rng=jax.random.PRNGKey(v["seed"] + 1))
+        r = s.run(3, callbacks=[EvalCallback(evalf, name="wnorm")])
+        np.testing.assert_allclose(
+            np.asarray(r.final_params["w"]),
+            np.asarray(res.select(i).final_params["w"]), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(r.metrics["wnorm"]),
+            np.asarray(res.metrics["wnorm"][i]), atol=1e-5)
+
+
+def test_sweep_axes_validation():
+    with pytest.raises(ValueError, match="at least one axis"):
+        SweepAxes().variants()
+    with pytest.raises(ValueError, match="empty"):
+        SweepAxes(lr=[]).variants()
+    with pytest.raises(ValueError, match="positive"):
+        SweepAxes(seeds=0).variants()
+    assert len(SweepAxes(seeds=4).variants()) == 4
+    assert len(SweepAxes(seeds=2, lr=[1e-3, 3e-3, 1e-2]).variants()) == 6
+    # last axis fastest, like nested loops
+    vs = SweepAxes(seeds=2, lr=[0.1, 0.2]).variants()
+    assert [v["seed"] for v in vs] == [0, 0, 1, 1]
+    assert [v["lr"] for v in vs] == [0.1, 0.2, 0.1, 0.2]
+
+
+def test_lr_sweep_rejects_schedules():
+    data, items = _facade_setup()
+    exp = Experiment.from_parts(
+        _loss, _initp, fed=FedConfig(num_nodes=4),
+        train=TrainConfig(learning_rate=lambda t: 0.05))
+    with pytest.raises(ValueError, match="schedule"):
+        exp.compile_batch(data, items, SweepAxes(lr=[0.05, 0.02]))
+
+
+def test_batched_session_cannot_checkpoint_or_resume(tmp_path):
+    data, items = _facade_setup()
+    exp = Experiment.from_parts(_loss, _initp,
+                                fed=FedConfig(num_nodes=4,
+                                              local_steps=2),
+                                train=TrainConfig(learning_rate=0.05,
+                                                  batch_size=4))
+    bs = exp.compile_batch(data, items, SweepAxes(seeds=2))
+    with pytest.raises(ValueError, match="cannot checkpoint a batched"):
+        bs.save(str(tmp_path / "ckpt"))
+    with pytest.raises(ValueError, match="cannot resume a batched"):
+        bs.resume(str(tmp_path / "ckpt"))
+    with pytest.raises(ValueError, match="unsupported on batched"):
+        bs.run_batch(2, callbacks=[CheckpointCallback(
+            str(tmp_path / "ckpt"), every=1)])
+
+
+def test_hierarchical_format_rejected():
+    data, items = _facade_setup()
+    fed = FedConfig(num_nodes=4, local_steps=2,
+                    mixing_format="hierarchical")
+    exp = Experiment.from_parts(_loss, _initp, fed=fed,
+                                train=TrainConfig(learning_rate=0.05,
+                                                  batch_size=4))
+    bs = exp.compile_batch(data, items, SweepAxes(seeds=2))
+    with pytest.raises(ValueError, match="hierarchical"):
+        bs.run_batch(2)

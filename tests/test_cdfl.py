@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs.base import FedConfig, TrainConfig
 from repro.core import baselines
-from repro.core.cdfl import make_trainer
+from repro.core.cdfl import build_trainer
 from repro.data import pipeline, redundancy, synthetic
 from repro.models import simple
 from repro.configs.paper_models import MLP_CONFIG
@@ -20,7 +20,7 @@ def _quadratic_setup(alg, rounds=25):
 
     fed = FedConfig(num_nodes=4, gamma=0.5, local_steps=2, algorithm=alg)
     train = TrainConfig(learning_rate=0.05)
-    tr = make_trainer(loss_fn, fed, train)
+    tr = build_trainer(loss_fn, fed, train)
     items = jax.random.randint(jax.random.PRNGKey(1), (4, 64, 4), 0, 40)
     state = tr.init(jax.random.PRNGKey(0),
                     lambda r: {"w": jax.random.normal(r, (3,))}, items)
@@ -49,7 +49,7 @@ def test_cnd_ratios_reflect_injected_redundancy():
     fed = FedConfig(num_nodes=4)
     train = TrainConfig(learning_rate=1e-3)
     loss = simple.make_mlp_loss(MLP_CONFIG)
-    tr = make_trainer(lambda p, b: loss(p, b), fed, train)
+    tr = build_trainer(lambda p, b: loss(p, b), fed, train)
     state = tr.init(jax.random.PRNGKey(0),
                     lambda r: simple.mlp_init(r, MLP_CONFIG),
                     jnp.asarray(batcher.node_items()))
@@ -173,7 +173,6 @@ def test_run_rounds_with_eval_fn():
 # <=1e-6 over 20 rounds for every transport and under a mobility stack.
 
 from repro.core import flatten, topology, transport as transport_lib
-from repro.core.cdfl import build_trainer
 from repro.configs.base import MobilityConfig
 from repro.optim import adam as make_adam
 

@@ -1,7 +1,7 @@
 """Experiment/Session façade acceptance: old string-configured trainer
 path == new declarative path (per transport × mobility), checkpoint/
 resume reproduces an unsegmented run exactly, callbacks subsume the
-ad-hoc kwargs, and the make_trainer shim deprecates without breaking."""
+ad-hoc kwargs, and the removed make_trainer shim stays removed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +10,7 @@ import pytest
 from repro.configs.base import (FedConfig, MobilityConfig, RunConfig,
                                 TrainConfig)
 from repro.configs.paper_models import MLP_CONFIG
-from repro.core.cdfl import build_trainer, make_trainer
+from repro.core.cdfl import build_trainer
 from repro.data import pipeline, synthetic
 from repro.experiment import (Callback, CheckpointCallback, ChurnLogCallback,
                               EvalCallback, Experiment)
@@ -231,14 +231,10 @@ def test_run_rejects_nonpositive_rounds_and_double_eval():
         session.run(1, callbacks=[ev, EvalCallback(lambda p: 1.0)])
 
 
-# --- deprecation shim --------------------------------------------------------
+# --- deprecated shim removal -------------------------------------------------
 
-def test_make_trainer_shim_warns_and_still_works():
-    fed, train, data, items = _setup()
-    with pytest.warns(DeprecationWarning, match="Experiment"):
-        tr = make_trainer(lambda p, b: _LOSS(p, b), fed, train)
-    state = tr.init(jax.random.PRNGKey(0),
-                    lambda r: simple.mlp_init(r, MLP_CONFIG), items)
-    final, m = tr.run_rounds(state, data, 2)
-    assert int(final.round) == 2
-    assert np.isfinite(np.asarray(m["loss"])).all()
+def test_make_trainer_shim_removed():
+    # the DeprecationWarning shim (PR 4) is gone: build_trainer or the
+    # Experiment façade are the supported constructors
+    import repro.core.cdfl as cdfl_mod
+    assert not hasattr(cdfl_mod, "make_trainer")

@@ -353,10 +353,10 @@ def test_metropolis_weighted_adjacency_scales_once():
 
 
 def test_fedavg_rejects_mobility():
-    from repro.core.cdfl import make_trainer
+    from repro.core.cdfl import build_trainer
     loss = lambda p, b: jnp.sum(p["w"] ** 2)                 # noqa: E731
     with pytest.raises(ValueError):
-        make_trainer(loss,
+        build_trainer(loss,
                      FedConfig(algorithm="fedavg",
                                mobility=MobilityConfig(kind="platoon")),
                      TrainConfig())

@@ -344,15 +344,15 @@ def test_run_rounds_ragged_n_items_stays_in_bounds():
 def test_transportless_algorithms_reject_transport_config(alg):
     """fedavg/dpsgd have no once-per-round buffer exchange; asking for a
     non-default transport must error instead of being silently ignored."""
-    from repro.core.cdfl import make_trainer
+    from repro.core.cdfl import build_trainer
     loss = lambda p, b: jnp.sum(p["w"] ** 2)                 # noqa: E731
     with pytest.raises(ValueError):
-        make_trainer(loss, FedConfig(algorithm=alg, transport="ring"),
+        build_trainer(loss, FedConfig(algorithm=alg, transport="ring"),
                      TrainConfig())
     with pytest.raises(ValueError):
-        make_trainer(loss, FedConfig(algorithm=alg, staleness=2),
+        build_trainer(loss, FedConfig(algorithm=alg, staleness=2),
                      TrainConfig())
-    make_trainer(loss, FedConfig(algorithm=alg), TrainConfig())  # default ok
+    build_trainer(loss, FedConfig(algorithm=alg), TrainConfig())  # default ok
 
 
 def test_make_transport_validates():
